@@ -1,0 +1,35 @@
+"""Shared benchmark plumbing: result caching, CSV emission, tiny timers."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict
+
+RESULTS_DIR = Path(__file__).resolve().parent / "results"
+RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+
+def cached(name: str, fn: Callable[[], Dict[str, Any]], force: bool = False) -> Dict[str, Any]:
+    """Run fn() once; cache its JSON-able result under results/<name>.json."""
+    path = RESULTS_DIR / f"{name}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    out = fn()
+    path.write_text(json.dumps(out, indent=1, sort_keys=True))
+    return out
+
+
+def emit_csv(rows):
+    """Harness contract: print ``name,us_per_call,derived`` lines."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

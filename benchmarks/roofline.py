@@ -1,0 +1,71 @@
+"""§Roofline: render the per-(arch × shape × mesh) roofline table from the
+dry-run artifacts (benchmarks/results/dryrun.json).
+
+    compute term    = HLO_FLOPs_per_device / 197e12  (bf16 peak, v5e)
+    memory term     = HLO_bytes_per_device / 819e9   (HBM bw)
+    collective term = ring-weighted wire bytes per device / 50e9 (ICI link)
+
+Also reports MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and the dominant
+term, and writes a markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun.json"
+MD_OUT = Path(__file__).resolve().parent / "results" / "roofline.md"
+
+
+def load(variant="baseline", mesh="single"):
+    data = json.loads(RESULTS.read_text())
+    rows = []
+    for key, r in sorted(data.items()):
+        if r.get("status") != "ok":
+            continue
+        if r["variant"] != variant or r["mesh"] != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def table(variant="baseline", mesh="single"):
+    rows = load(variant, mesh)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful/HLO flops | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['t_compute_s']:.4f} | "
+            f"{rl['t_memory_s']:.4f} | {rl['t_collective_s']:.4f} | "
+            f"{rl['dominant']} | {r['model']['useful_flops_ratio']:.3f} | "
+            f"{r['memory']['peak_bytes']/1e9:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def rows():
+    out = []
+    for r in load():
+        rl = r["roofline"]
+        bound = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        # roofline fraction: how close the compute term is to the binding term
+        frac = rl["t_compute_s"] / bound if bound > 0 else 0.0
+        out.append(
+            (
+                f"roofline/{r['arch']}/{r['shape']}",
+                bound * 1e6,
+                f"dominant={rl['dominant']} compute_fraction={frac:.3f} "
+                f"useful={r['model']['useful_flops_ratio']:.3f}",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    md = table()
+    MD_OUT.write_text(md)
+    print(md)

@@ -1,0 +1,60 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--force]
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).  Results
+are cached under benchmarks/results/*.json; --force recomputes.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-list of module names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        dnn_convergence,
+        memory_overhead,
+        page_aware,
+        pipeline_throughput,
+        queue_size,
+        roofline,
+        svm_convergence,
+        training_time,
+    )
+
+    modules = {
+        "svm_convergence": svm_convergence,     # Tables 3 & 4, Fig 9
+        "dnn_convergence": dnn_convergence,     # Tables 6 & 7, Fig 12
+        "queue_size": queue_size,               # Fig 3
+        "training_time": training_time,         # Figs 10 & 13 (Eq. 1)
+        "page_aware": page_aware,               # Fig 11
+        "memory_overhead": memory_overhead,     # Table 5
+        "pipeline_throughput": pipeline_throughput,
+        "roofline": roofline,                   # §Roofline (from dry-run)
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    failed = 0
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        try:
+            if hasattr(mod, "run") and args.force:
+                mod.run(force=True)
+            for row_name, us, derived in mod.rows():
+                print(f'{row_name},{us:.3f},"{derived}"')
+        except Exception:
+            failed += 1
+            print(f"{name},nan,FAILED", file=sys.stdout)
+            traceback.print_exc()
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

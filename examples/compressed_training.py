@@ -1,0 +1,51 @@
+"""Scenario: int8 error-feedback gradient compression (distributed-
+optimization trick for the 1000+-node DCN gradient sync) — trained
+side-by-side with the uncompressed baseline to show convergence parity.
+
+    PYTHONPATH=src python examples/compressed_training.py
+"""
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.shuffler import LIRSShuffler
+from repro.data.synthetic import decode_token_batch, make_token_dataset
+from repro.storage.record_store import RecordStore
+from repro.train.compression import EFCompressor
+from repro.train.optimizer import AdamW, AdamWConfig
+from repro.train.steps import init_train_state, make_train_step
+
+
+def run(compressor, store, seq, epochs=3):
+    cfg = get_config("minitron-8b", smoke=True).replace(vocab_size=64)
+    opt = AdamW(AdamWConfig(lr=3e-3, warmup_steps=2))
+    step = jax.jit(make_train_step(cfg, opt, compressor=compressor), donate_argnums=(0,))
+    state = init_train_state(cfg, jax.random.PRNGKey(0), opt, compressor)
+    sh = LIRSShuffler(store.num_records, 8, seed=0)
+    losses = []
+    for e in range(epochs):
+        for idx in sh.epoch_batches(e):
+            batch = decode_token_batch(store.read_batch(idx), seq)
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+    return losses
+
+
+def main():
+    d = tempfile.mkdtemp()
+    meta = make_token_dataset(f"{d}/t.rrec", 64, seq_len=16, vocab=64, seed=2)
+    store = RecordStore(meta.path)
+
+    base = run(None, store, 16)
+    comp = run(EFCompressor(bits=8), store, 16)
+    print(f"uncompressed: {base[0]:.3f} -> {base[-1]:.3f}")
+    print(f"int8+EF     : {comp[0]:.3f} -> {comp[-1]:.3f}")
+    gap = abs(np.mean(base[-4:]) - np.mean(comp[-4:]))
+    print(f"final-loss gap: {gap:.4f} (wire bytes for the grad sync: x0.25)")
+    assert gap < 0.15, "EF compression should track the uncompressed run"
+
+
+if __name__ == "__main__":
+    main()

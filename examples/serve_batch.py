@@ -1,0 +1,17 @@
+"""Scenario: batched serving — prefill a batch of prompts, decode greedily.
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch xlstm-1.3b]
+
+Defaults to the recurrentgemma smoke config to exercise the hybrid
+(RG-LRU + local-attention ring) cache path.
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "recurrentgemma-2b", "--smoke", "--batch", "2",
+                            "--prompt-len", "24", "--gen", "8"]
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    serve_main(argv)

@@ -1,0 +1,23 @@
+"""Scenario: end-to-end LM training driver (the full launcher).
+
+    # a few hundred steps on a reduced config (CPU-friendly):
+    PYTHONPATH=src python examples/train_lm.py --arch minitron-8b --smoke \
+        --epochs 8 --num-records 512 --batch 16
+
+    # fault-tolerance drill: preempt at step 30, then resume:
+    PYTHONPATH=src python examples/train_lm.py --smoke --ckpt-dir /tmp/ck \
+        --fail-at-step 30 ; \
+    PYTHONPATH=src python examples/train_lm.py --smoke --ckpt-dir /tmp/ck --resume
+
+Passes straight through to repro.launch.train (the production launcher).
+A ~100M-parameter run is the same command without --smoke on a larger
+--arch config; on this CPU-only box that is compute-limited, so the
+default demonstrates the full code path at reduced width.
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "minitron-8b", "--smoke", "--epochs", "4"]
+    train_main(argv)

@@ -1,0 +1,55 @@
+"""Architecture registry: one module per assigned architecture.
+
+Every module exposes ``full_config()`` (the exact published dims) and
+``smoke_config()`` (a reduced same-family config runnable on CPU).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[name])
+    return mod.smoke_config() if smoke else mod.full_config()
+
+
+# Shape cells assigned to the LM-family pool (all archs share these).
+SHAPES: Dict[str, dict] = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# long_500k requires sub-quadratic sequence mixing (see DESIGN.md §6).
+SUBQUADRATIC = {"recurrentgemma-2b", "xlstm-1.3b"}
+
+
+def cell_is_runnable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in SUBQUADRATIC
+    return True
+
+
+def all_cells():
+    return [
+        (a, s) for a in ARCH_IDS for s in SHAPES if cell_is_runnable(a, s)
+    ]

@@ -1,0 +1,36 @@
+"""granite-3-8b [dense]: GQA.
+
+40L d_model=4096 32H (GQA kv=8) d_ff=12800 vocab=49155
+[hf:ibm-granite/granite-3.0 family].
+"""
+from repro.models.config import ModelConfig
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-8b",
+        family="dense",
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=12800,
+        vocab_size=49155,
+        activation="swiglu",
+        stages=((("attn",), 40),),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-8b-smoke",
+        family="dense",
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=160,
+        vocab_size=512,
+        activation="swiglu",
+        stages=((("attn",), 2),),
+    )

@@ -1,0 +1,16 @@
+"""LIRS — the paper's primary contribution.
+
+- location:   Data-Format-Aware Location Generator (offset tables)
+- assignment: random assignment tables (explicit + O(1) Feistel)
+- shuffler:   LIRS (instance / page-aware) + BMF + TFIP baselines
+- sampler:    deterministic sharded multi-host sampler (elastic, stealable)
+- pipeline:   prefetching input pipeline with Eq.1 time accounting
+"""
+from repro.core.assignment import FeistelAssignment, TableAssignment  # noqa: F401
+from repro.core.location import LocationGenerator  # noqa: F401
+from repro.core.sampler import ShardedSampler  # noqa: F401
+from repro.core.shuffler import (  # noqa: F401
+    BMFShuffler,
+    LIRSShuffler,
+    TFIPShuffler,
+)

@@ -1,0 +1,175 @@
+"""Batch-composition strategies (the heart of the paper's comparison).
+
+All shufflers yield, per epoch, a sequence of batches of instance indices
+and expose an ``io_plan()`` describing the storage access pattern the
+strategy induces, so the device cost models (Table 2) can price an epoch
+without real hardware.
+
+LIRSShuffler   full-range re-shuffle every epoch; batches are read with
+               *random* I/O.  Page-aware mode groups instances sharing a
+               page into the same batch (paper §4.1).
+BMFShuffler    Block Minimization Framework: one-time physical shuffle into
+               fixed blocks (pre-processing: sequential read + random
+               write-back), then per-epoch re-shuffle of *block order only*;
+               blocks are read sequentially.
+TFIPShuffler   TensorFlow input pipeline: sequential reads through a
+               bounded shuffle queue of Q instances; randomness limited to
+               the queue window.  queue_size=1 ≡ no shuffling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.assignment import FeistelAssignment, TableAssignment
+from repro.storage.record_store import PAGE
+
+
+@dataclasses.dataclass
+class IOPlan:
+    """Per-epoch storage access pattern (for the device cost models)."""
+
+    preprocess_seq_read_bytes: float = 0.0
+    preprocess_rand_write_ios: float = 0.0
+    preprocess_rand_write_bytes: float = 0.0
+    epoch_seq_read_bytes: float = 0.0
+    epoch_rand_read_ios: float = 0.0
+    epoch_rand_read_bytes: float = 0.0
+
+
+class LIRSShuffler:
+    def __init__(
+        self,
+        num_items: int,
+        batch_size: int,
+        seed: int = 0,
+        page_aware: bool = False,
+        page_groups: Optional[Sequence[np.ndarray]] = None,
+        assignment: str = "table",
+        avg_instance_bytes: float = 0.0,
+    ):
+        self.num_items = num_items
+        self.batch_size = batch_size
+        self.page_aware = page_aware
+        self.page_groups = list(page_groups) if page_groups is not None else None
+        if page_aware and self.page_groups is None:
+            raise ValueError("page_aware LIRS needs page_groups from the record store")
+        n_units = len(self.page_groups) if page_aware else num_items
+        cls = TableAssignment if assignment == "table" else FeistelAssignment
+        self.assignment = cls(n_units, seed)
+        self.avg_instance_bytes = avg_instance_bytes
+
+    @property
+    def table_nbytes(self) -> int:
+        return self.assignment.nbytes
+
+    def epoch_batches(self, epoch: int) -> Iterator[np.ndarray]:
+        if not self.page_aware:
+            perm = self.assignment.epoch_permutation(epoch)
+            for i in range(0, self.num_items - self.batch_size + 1, self.batch_size):
+                yield perm[i : i + self.batch_size]
+            rem = self.num_items % self.batch_size
+            if rem:
+                yield perm[self.num_items - rem :]
+            return
+        # page-aware: permute page groups; fill batches with whole pages
+        order = self.assignment.epoch_permutation(epoch)
+        batch: List[np.ndarray] = []
+        n = 0
+        for gi in order:
+            grp = self.page_groups[int(gi)]
+            batch.append(grp)
+            n += len(grp)
+            if n >= self.batch_size:
+                yield np.concatenate(batch)
+                batch, n = [], 0
+        if batch:
+            yield np.concatenate(batch)
+
+    def io_plan(self, total_bytes: float, is_sparse: bool) -> IOPlan:
+        plan = IOPlan()
+        if is_sparse:  # offset-table scan (Fig 7b)
+            plan.preprocess_seq_read_bytes = total_bytes
+        if self.page_aware:
+            n_ios = len(self.page_groups)
+        else:
+            n_ios = self.num_items
+        plan.epoch_rand_read_ios = n_ios
+        plan.epoch_rand_read_bytes = total_bytes
+        return plan
+
+
+class BMFShuffler:
+    def __init__(self, num_items: int, num_blocks: int, seed: int = 0):
+        self.num_items = num_items
+        self.num_blocks = num_blocks
+        rng = np.random.default_rng((seed, 0xB3F))
+        # the one-time physical shuffle: a fixed random partition into blocks
+        perm = rng.permutation(num_items).astype(np.int64)
+        self.blocks = np.array_split(perm, num_blocks)
+        self.seed = seed
+
+    def epoch_batches(self, epoch: int) -> Iterator[np.ndarray]:
+        rng = np.random.default_rng((self.seed, epoch + 1))
+        for bi in rng.permutation(self.num_blocks):
+            # block contents are physically contiguous after pre-processing:
+            # reading one is a sequential scan
+            yield self.blocks[int(bi)]
+
+    def io_plan(self, total_bytes: float, is_sparse: bool) -> IOPlan:
+        return IOPlan(
+            # pre-processing: read everything once + write it back in
+            # randomly assigned order (Fig 7a)
+            preprocess_seq_read_bytes=total_bytes,
+            preprocess_rand_write_ios=self.num_items,
+            preprocess_rand_write_bytes=total_bytes,
+            epoch_seq_read_bytes=total_bytes,
+        )
+
+
+class TFIPShuffler:
+    def __init__(self, num_items: int, batch_size: int, queue_size: int, seed: int = 0):
+        self.num_items = num_items
+        self.batch_size = batch_size
+        self.queue_size = max(1, queue_size)
+        self.seed = seed
+
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        """Streaming window shuffle of sequential reads."""
+        rng = np.random.default_rng((self.seed, epoch))
+        q: List[int] = []
+        out = np.empty(self.num_items, dtype=np.int64)
+        w = 0
+        for i in range(self.num_items):
+            q.append(i)
+            if len(q) >= self.queue_size:
+                j = rng.integers(len(q))
+                q[j], q[-1] = q[-1], q[j]
+                out[w] = q.pop()
+                w += 1
+        while q:
+            j = rng.integers(len(q))
+            q[j], q[-1] = q[-1], q[j]
+            out[w] = q.pop()
+            w += 1
+        return out
+
+    def epoch_batches(self, epoch: int) -> Iterator[np.ndarray]:
+        order = self.epoch_order(epoch)
+        for i in range(0, self.num_items, self.batch_size):
+            yield order[i : i + self.batch_size]
+
+    def queue_nbytes(self, instance_bytes: float) -> float:
+        """Host memory the shuffle queue occupies (paper §3.2: 7.3 GB)."""
+        return self.queue_size * instance_bytes
+
+    def io_plan(self, total_bytes: float, is_sparse: bool) -> IOPlan:
+        return IOPlan(
+            # TFIP also fully shuffles the dataset once before training
+            preprocess_seq_read_bytes=total_bytes,
+            preprocess_rand_write_ios=self.num_items,
+            preprocess_rand_write_bytes=total_bytes,
+            epoch_seq_read_bytes=total_bytes,
+        )

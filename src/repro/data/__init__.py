@@ -1,0 +1,8 @@
+from repro.data.synthetic import (  # noqa: F401
+    DatasetMeta,
+    decode_dense,
+    decode_sparse,
+    decode_tokens,
+    make_classification_dataset,
+    make_token_dataset,
+)

@@ -1,0 +1,1 @@
+from repro.dnn.mlp import MLPClassifier  # noqa: F401

@@ -1,0 +1,89 @@
+"""Small MLP classifier substrate (the paper's DNN workload, CPU-scaled).
+
+Multiclass softmax MLP trained with mini-batch SGD+momentum; used by the
+DNN convergence/accuracy benchmarks to compare TFIP (bounded shuffle
+queue) against LIRS (full re-shuffle) exactly as §5.3 does for
+AlexNet/OverFeat/VGG16 on ImageNet.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init(rng, dims):
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(rng, i)
+        params.append(
+            {
+                "w": jax.random.normal(k, (a, b), jnp.float32) / np.sqrt(a),
+                "b": jnp.zeros((b,), jnp.float32),
+            }
+        )
+    return params
+
+
+def _forward(params, x):
+    for layer in params[:-1]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    out = params[-1]
+    return x @ out["w"] + out["b"]
+
+
+@jax.jit
+def _loss(params, x, y):
+    logits = _forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+
+@jax.jit
+def _step(params, vel, x, y, lr, mom):
+    loss, grads = jax.value_and_grad(_loss)(params, x, y)
+    vel = jax.tree_util.tree_map(lambda v, g: mom * v + g, vel, grads)
+    params = jax.tree_util.tree_map(lambda p, v: p - lr * v, params, vel)
+    return params, vel, loss
+
+
+class MLPClassifier:
+    def __init__(self, dim: int, num_classes: int, hidden=(64, 64), seed: int = 0,
+                 lr: float = 0.05, momentum: float = 0.9):
+        self.params = _init(jax.random.PRNGKey(seed), (dim, *hidden, num_classes))
+        self.vel = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        self.lr, self.momentum = lr, momentum
+
+    def train_batch(self, x: np.ndarray, y: np.ndarray) -> float:
+        self.params, self.vel, loss = _step(
+            self.params, self.vel, x, y, self.lr, self.momentum
+        )
+        return float(loss)
+
+    def loss(self, x, y) -> float:
+        return float(_loss(self.params, x, y))
+
+    def accuracy(self, x, y) -> float:
+        pred = np.asarray(jnp.argmax(_forward(self.params, x), -1))
+        return float((pred == y).mean())
+
+
+def make_clustered_data(
+    n: int, dim: int, num_classes: int, seed: int = 0, class_sorted: bool = True,
+    spread: float = 1.0, centers: np.ndarray | None = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Gaussian class clusters.  ``class_sorted=True`` stores instances in
+    class order — the on-disk layout (ImageNet-style) that makes bounded
+    shuffle queues lose accuracy (paper Fig 3).  Pass ``centers`` to draw a
+    matched test split.  Returns (xs, ys, centers)."""
+    rng = np.random.default_rng(seed)
+    if centers is None:
+        centers = rng.normal(size=(num_classes, dim)) * spread
+    ys = np.repeat(np.arange(num_classes), n // num_classes)
+    xs = centers[ys] + rng.normal(size=(len(ys), dim))
+    if not class_sorted:
+        order = rng.permutation(len(ys))
+        xs, ys = xs[order], ys[order]
+    return xs.astype(np.float32), ys.astype(np.int32), centers

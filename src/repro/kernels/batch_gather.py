@@ -1,0 +1,70 @@
+"""batch_gather — the LIRS kernel: indexed gather of records from an
+HBM-resident table into a contiguous batch buffer.
+
+This is the TPU-native analogue of LIRS's random preads: the *random
+assignment table* (scalar-prefetched indices) drives per-step DMA of one
+record block HBM→VMEM.  ``rows_per_block`` is the device-side page-aware
+knob: gathering R consecutive rows per indexed block amortizes DMA setup
+exactly like page-granular reads amortize I/O — the paper's §4.1 argument
+re-materialized at the memory-hierarchy level.
+
+Grid: (batch, d_model/block_d).  The index map of the table operand reads
+the scalar-prefetched index ref — Pallas's supported pattern for
+data-dependent block addressing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, table_ref, out_ref):
+    # the whole block selected by the scalar-prefetched index is already in
+    # VMEM; emit it
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_d", "rows_per_block", "interpret")
+)
+def batch_gather(
+    table: jax.Array,
+    indices: jax.Array,
+    *,
+    block_d: int = 512,
+    rows_per_block: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather ``rows_per_block`` consecutive rows starting at
+    ``indices[i] * rows_per_block`` for each i.
+
+    table:   (N, D)  — HBM-resident dataset shard
+    indices: (B,) int32 — block ids (record ids when rows_per_block=1)
+    returns: (B * rows_per_block, D)
+    """
+    n, d = table.shape
+    b = indices.shape[0]
+    r = rows_per_block
+    assert n % r == 0, (n, r)
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+
+    grid = (b, d // bd)
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((r, bd), lambda i, j, idx: (idx[i], j)),
+            ],
+            out_specs=pl.BlockSpec((r, bd), lambda i, j, idx: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b * r, d), table.dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), table)
+    return out

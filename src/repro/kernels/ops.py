@@ -1,0 +1,47 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU-only box, ``interpret=True`` executes the kernel bodies in
+Python for correctness validation; on a real TPU the same calls compile to
+Mosaic.  ``INTERPRET`` defaults to True when no TPU is present.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.batch_gather import batch_gather as _batch_gather
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.rglru_scan import rglru_scan as _rglru_scan
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def batch_gather(table, indices, *, block_d: int = 512, rows_per_block: int = 1,
+                 interpret: bool | None = None):
+    return _batch_gather(
+        table, indices, block_d=block_d, rows_per_block=rows_per_block,
+        interpret=INTERPRET if interpret is None else interpret,
+    )
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    return _flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=INTERPRET if interpret is None else interpret,
+    )
+
+
+def rglru_scan(a, x, *, block_b: int = 8, block_t: int = 128, block_w: int = 512,
+               interpret: bool | None = None):
+    return _rglru_scan(
+        a, x, block_b=block_b, block_t=block_t, block_w=block_w,
+        interpret=INTERPRET if interpret is None else interpret,
+    )
+
+
+def flash_decode(q, k_cache, v_cache, cur_index, *, block_k: int = 256,
+                 interpret: bool | None = None):
+    from repro.kernels.flash_decode import flash_decode as _fd
+
+    return _fd(q, k_cache, v_cache, cur_index, block_k=block_k,
+               interpret=INTERPRET if interpret is None else interpret)

@@ -1,0 +1,423 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract the roofline terms from the compiled artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch ... --set attn_impl=blocked --variant flash
+
+Measurement methodology
+-----------------------
+The *full* model compiles with ``lax.scan`` over layers (compact HLO — the
+production form; this is the compile/memory proof).  But XLA's
+HloCostAnalysis counts while-loop bodies ONCE, so the scanned artifact
+undercounts FLOPs / bytes / collectives by ~num_layers×.  We therefore
+compile small UNROLLED probes — per-stage repeats 1 and 2 — and solve
+
+    total(r) = base + Σ_s r_s · body_s
+
+for the per-stage body costs, then extrapolate to the full depth.  Probes
+are partitioned on the same mesh with the same shardings, so per-device
+semantics match.  (sLSTM's time-dimension scan cannot be unrolled; its
+recurrent-matmul FLOPs are added analytically and recorded as such.)
+
+Results are cached incrementally in benchmarks/results/dryrun.json keyed by
+(arch, shape, mesh, strategy, variant); re-runs skip completed cells unless
+--force.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.configs import SHAPES, all_cells, cell_is_runnable, get_config
+from repro.launch.hlo_stats import collective_stats, op_histogram
+from repro.launch.input_specs import input_specs
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.layers.common import ShardCtx
+from repro.models import model as M
+from repro.sharding.specs import batch_pspecs, cache_pspecs, param_pspecs, state_pspecs
+from repro.train.optimizer import AdamW
+from repro.train.steps import make_decode_step, make_prefill_step, make_train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun.json"
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+# archs whose default strategy is plain TP (small enough to replicate over data)
+TP_ONLY = {"whisper-tiny"}
+
+
+def apply_overrides(cfg, overrides):
+    for kv in overrides or []:
+        key, val = kv.split("=", 1)
+        if val in ("true", "True"):
+            val = True
+        elif val in ("false", "False"):
+            val = False
+        else:
+            try:
+                val = int(val)
+            except ValueError:
+                try:
+                    val = float(val)
+                except ValueError:
+                    pass
+        if key.startswith("moe."):
+            cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, **{key[4:]: val}))
+        else:
+            cfg = cfg.replace(**{key: val})
+    return cfg
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+# --------------------------------------------------- per-stage repeat maps
+
+
+def stage_sites(cfg):
+    """[(site, repeats)] for every scanned stage (decoder + encoder)."""
+    sites = [(("stages", i), r) for i, (_, r) in enumerate(cfg.stages)]
+    if cfg.encoder is not None:
+        sites += [(("encoder", i), r) for i, (_, r) in enumerate(cfg.encoder.stages)]
+    return sites
+
+
+def with_repeats(cfg, rep_map):
+    stages = tuple(
+        (pat, rep_map.get(("stages", i), r)) for i, (pat, r) in enumerate(cfg.stages)
+    )
+    enc = cfg.encoder
+    if enc is not None:
+        enc = dataclasses.replace(
+            enc,
+            stages=tuple(
+                (pat, rep_map.get(("encoder", i), r))
+                for i, (pat, r) in enumerate(enc.stages)
+            ),
+        )
+    return cfg.replace(stages=stages, encoder=enc)
+
+
+# --------------------------------------------------------------- measure
+
+
+def measure(cfg, shape_name, mesh, strategy, keep_hlo=False):
+    """Lower + compile one configuration; return raw per-device costs."""
+    nchips = mesh.devices.size
+    dp = dp_axes(mesh)
+    ctx = ShardCtx(mesh=mesh, dp=dp)
+    opt = AdamW()
+    kind, specs = input_specs(cfg, shape_name, opt)
+
+    if kind == "train":
+        state_sp, batch_sp = specs
+        in_sh = (
+            _ns(mesh, state_pspecs(cfg, state_sp, mesh, strategy)),
+            _ns(mesh, batch_pspecs(batch_sp, mesh, dp)),
+        )
+        jf = jax.jit(make_train_step(cfg, opt, ctx), in_shardings=in_sh, donate_argnums=(0,))
+    elif kind == "prefill":
+        params_sp, tok_sp, ex_sp = specs
+        in_sh = (
+            _ns(mesh, param_pspecs(cfg, params_sp, mesh, strategy)),
+            _ns(mesh, batch_pspecs(tok_sp, mesh, dp)),
+            _ns(mesh, batch_pspecs(ex_sp, mesh, dp)),
+        )
+        jf = jax.jit(make_prefill_step(cfg, ctx), in_shardings=in_sh)
+    else:
+        params_sp, cache_sp, tok_sp, ex_sp = specs
+        in_sh = (
+            _ns(mesh, param_pspecs(cfg, params_sp, mesh, strategy)),
+            _ns(mesh, cache_pspecs(cache_sp, mesh, dp)),
+            _ns(mesh, batch_pspecs(tok_sp, mesh, dp)),
+            _ns(mesh, batch_pspecs(ex_sp, mesh, dp)),
+        )
+        jf = jax.jit(make_decode_step(cfg, ctx), in_shardings=in_sh, donate_argnums=(1,))
+
+    t0 = time.time()
+    with mesh:
+        lowered = jf.lower(*specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    colls = collective_stats(hlo, nchips)
+    return {
+        "kind": kind,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_wire": colls.per_device_bytes,
+        "coll_raw": colls.raw_bytes,
+        "coll_count": colls.count,
+        "coll_by_kind": dict(colls.by_kind),
+        "mem": mem,
+        "t_lower": t_lower,
+        "t_compile": t_compile,
+        "hlo": hlo if keep_hlo else None,
+    }
+
+
+METRICS = ("flops", "bytes", "coll_wire", "coll_raw", "coll_count")
+
+
+def probe_extrapolate(cfg, shape_name, mesh, strategy):
+    """Unrolled probes at per-stage repeats 1 / 2 -> exact per-layer costs."""
+    sites = stage_sites(cfg)
+    ones = {site: 1 for site, _ in sites}
+    base_probe = measure(
+        with_repeats(cfg, ones).replace(scan_layers=False), shape_name, mesh, strategy
+    )
+    bodies = {}
+    coll_kinds: dict = {}
+    for site, _ in sites:
+        rep = dict(ones)
+        rep[site] = 2
+        p = measure(
+            with_repeats(cfg, rep).replace(scan_layers=False), shape_name, mesh, strategy
+        )
+        bodies[site] = {m: p[m] - base_probe[m] for m in METRICS}
+        for k, v in p["coll_by_kind"].items():
+            coll_kinds[k] = coll_kinds.get(k, 0.0) + (
+                v - base_probe["coll_by_kind"].get(k, 0.0)
+            )
+    out = {}
+    for m in METRICS:
+        body_sum1 = sum(bodies[site][m] for site, _ in sites)
+        base = base_probe[m] - body_sum1
+        out[m] = base + sum(r * bodies[site][m] for site, r in sites)
+    # per-kind collective composition: scale the probe's mix by the
+    # aggregate extrapolation ratio (kinds are uniform across layers)
+    scale = out["coll_wire"] / max(base_probe["coll_wire"], 1e-9)
+    out["coll_by_kind"] = {k: v * scale for k, v in base_probe["coll_by_kind"].items()}
+    out["probe_compile_s"] = base_probe["t_compile"]
+    return out
+
+
+def analytic_slstm_flops(cfg, shape_name) -> float:
+    """sLSTM time-scan FLOPs (global) that HLO analysis cannot see."""
+    n_slstm = sum(
+        pat.count("slstm") * r for pat, r in cfg.stages
+    )
+    if n_slstm == 0:
+        return 0.0
+    sh = SHAPES[shape_name]
+    if sh["kind"] == "decode":
+        tokens = sh["global_batch"]
+    else:
+        tokens = sh["global_batch"] * sh["seq_len"]
+    d = cfg.d_model
+    hd = d // cfg.num_heads
+    fwd = 2.0 * tokens * 4 * d * hd  # block-diag recurrent matmuls
+    mult = 3.0 if sh["kind"] == "train" else 1.0  # fwd+bwd
+    return n_slstm * fwd * mult
+
+
+def analytic_mlstm_chunk_flops(cfg, shape_name) -> float:
+    """mLSTM chunk-scan FLOPs when the scan stays rolled (nc > 32; the
+    probe counts one chunk body, so add the remaining nc-1)."""
+    n_mlstm = sum(pat.count("mlstm") * r for pat, r in cfg.stages)
+    sh = SHAPES[shape_name]
+    if n_mlstm == 0 or sh["kind"] == "decode":
+        return 0.0
+    s = sh["seq_len"]
+    c = min(cfg.mlstm_chunk, s)
+    nc = s // c
+    if nc <= 32:
+        return 0.0  # chunk scan was unrolled; HLO counted everything
+    b = sh["global_batch"]
+    dp = ((int(cfg.d_model * cfg.mlstm_proj_factor) + 127) // 128) * 128
+    hd = dp // cfg.num_heads
+    per_chunk = cfg.num_heads * (4.0 * c * c * hd + 4.0 * c * hd * hd)
+    mult = 3.0 if sh["kind"] == "train" else 1.0
+    return n_mlstm * b * (nc - 1) * per_chunk * mult
+
+
+def run_cell(arch, shape_name, mesh_kind, strategy=None, overrides=None,
+             variant="baseline", keep_hlo=False):
+    cfg = apply_overrides(get_config(arch), overrides)
+    strategy = strategy or ("tp" if arch in TP_ONLY else "fsdp_tp")
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    nchips = mesh.devices.size
+
+    # 1) full-depth scanned compile: the compile/memory/sharding proof
+    full = measure(cfg.replace(scan_layers=True), shape_name, mesh, strategy,
+                   keep_hlo=keep_hlo)
+    # 2) unrolled probes -> accurate per-device flops/bytes/collectives
+    ex = probe_extrapolate(cfg, shape_name, mesh, strategy)
+    extra_flops = (
+        analytic_slstm_flops(cfg, shape_name)
+        + analytic_mlstm_chunk_flops(cfg, shape_name)
+    ) / nchips
+    flops_dev = ex["flops"] + extra_flops
+    bytes_dev = ex["bytes"]
+    coll_dev = ex["coll_wire"]
+
+    n_params = M.param_count(cfg)
+    n_active = M.param_count(cfg, active_only=True)
+    sh = SHAPES[shape_name]
+    kind = full["kind"]
+    tokens = sh["global_batch"] * (sh["seq_len"] if kind != "decode" else 1)
+    model_flops = 6.0 * n_active * tokens if kind == "train" else 2.0 * n_active * tokens
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mem = full["mem"]
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "strategy": strategy,
+        "variant": variant,
+        "kind": kind,
+        "chips": int(nchips),
+        "status": "ok",
+        "lower_s": round(full["t_lower"], 2),
+        "compile_s": round(full["t_compile"], 2),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_per_device_bytes": coll_dev,
+        "collective_raw_bytes": ex["coll_raw"],
+        "collective_count": ex["coll_count"],
+        "collective_by_kind": ex["coll_by_kind"],
+        "analytic_slstm_flops_per_device": extra_flops,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+        },
+        "model": {
+            "params": n_params,
+            "active_params": n_active,
+            "model_flops_global": model_flops,
+            "hlo_flops_global": flops_dev * nchips,
+            "useful_flops_ratio": model_flops / max(flops_dev * nchips, 1.0),
+        },
+        "overrides": list(overrides or []),
+    }
+    if keep_hlo and full["hlo"]:
+        hdir = RESULTS.parent / "hlo"
+        hdir.mkdir(parents=True, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{mesh_kind}_{variant}.hlo.txt"
+        (hdir / fname).write_text(full["hlo"])
+        result["hlo_path"] = str(hdir / fname)
+        result["op_histogram"] = {
+            k: v
+            for k, v in sorted(op_histogram(full["hlo"]).items(), key=lambda kv: -kv[1])[:40]
+        }
+    return result
+
+
+def cell_key(arch, shape, mesh_kind, strategy, variant):
+    return f"{arch}|{shape}|{mesh_kind}|{strategy}|{variant}"
+
+
+def load_results():
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return {}
+
+
+def save_results(res):
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    tmp = RESULTS.with_suffix(".tmp")
+    tmp.write_text(json.dumps(res, indent=1, sort_keys=True))
+    tmp.replace(RESULTS)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every runnable cell")
+    ap.add_argument("--strategy", default=None, choices=[None, "tp", "fsdp_tp"])
+    ap.add_argument("--set", dest="overrides", action="append", default=[])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all) required"
+        assert cell_is_runnable(args.arch, args.shape), (
+            f"cell ({args.arch},{args.shape}) is not runnable (see DESIGN.md §6)"
+        )
+        cells = [(args.arch, args.shape)]
+
+    results = load_results()
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            strategy = args.strategy or ("tp" if arch in TP_ONLY else "fsdp_tp")
+            key = cell_key(arch, shape, mk, strategy, args.variant)
+            if not args.force and results.get(key, {}).get("status") == "ok":
+                print(f"[skip cached] {key}")
+                continue
+            print(f"[run] {key} ...", flush=True)
+            try:
+                r = run_cell(arch, shape, mk, args.strategy, args.overrides,
+                             args.variant, args.keep_hlo)
+                rl = r["roofline"]
+                print(
+                    f"  ok: compile={r['compile_s']:.1f}s dominant={rl['dominant']} "
+                    f"compute={rl['t_compute_s']:.4f}s memory={rl['t_memory_s']:.4f}s "
+                    f"collective={rl['t_collective_s']:.4f}s "
+                    f"useful={r['model']['useful_flops_ratio']:.3f} "
+                    f"peak={r['memory']['peak_bytes']/1e9:.2f}GB",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 — record failures as data
+                failures += 1
+                r = {
+                    "arch": arch, "shape": shape, "mesh": mk,
+                    "strategy": strategy, "variant": args.variant,
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                print(f"  FAILED: {type(e).__name__}: {e}", flush=True)
+            results[key] = r
+            save_results(results)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Parse compiled (post-SPMD-partitioning) HLO text for roofline terms.
+
+Shapes in the optimized HLO are PER-DEVICE.  For each collective we
+estimate per-device bytes-on-wire with a ring model:
+
+    all-reduce       2·(g-1)/g · bytes(operand)
+    all-gather       (g-1)/g   · bytes(output)
+    reduce-scatter   (g-1)/g   · bytes(operand)
+    all-to-all       (g-1)/g   · bytes(operand)
+    collective-permute           bytes(operand)
+
+where g is the replica-group size.  We also report the raw (unweighted)
+operand-byte sum for reference.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+?)\s+([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+@dataclass
+class CollectiveStats:
+    per_device_bytes: float = 0.0  # ring-weighted wire bytes per device
+    raw_bytes: float = 0.0         # unweighted operand/output bytes
+    count: int = 0
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    ops: List[dict] = field(default_factory=list)
+
+
+def collective_stats(hlo_text: str, total_devices: int, keep_ops: bool = False) -> CollectiveStats:
+    # pass 1: map instruction name -> its (output) shape string
+    shapes: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, out_shape, opcode = m.groups()
+        kind = next((c for c in _COLLECTIVES if opcode.startswith(c)), None)
+        if kind is None:
+            continue
+        if opcode.endswith("-done"):
+            continue  # async pair: counted at -start
+        # operand shapes: resolve %names inside the parens
+        args = re.search(r"\(([^)]*)\)", line.split(opcode, 1)[1])
+        operand_bytes = 0
+        if args:
+            for ref in re.findall(r"%?([\w.\-]+)", args.group(1)):
+                if ref in shapes:
+                    operand_bytes += _shape_bytes(shapes[ref])
+        out_bytes = _shape_bytes(out_shape)
+        g = _group_size(line, total_devices)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            wire = 2.0 * frac * (operand_bytes or out_bytes)
+            raw = operand_bytes or out_bytes
+        elif kind == "all-gather":
+            wire = frac * out_bytes
+            raw = out_bytes
+        elif kind == "reduce-scatter":
+            wire = frac * (operand_bytes or out_bytes * g)
+            raw = operand_bytes or out_bytes * g
+        elif kind in ("all-to-all", "ragged-all-to-all"):
+            wire = frac * (operand_bytes or out_bytes)
+            raw = operand_bytes or out_bytes
+        else:  # collective-permute
+            wire = float(operand_bytes or out_bytes)
+            raw = operand_bytes or out_bytes
+        stats.per_device_bytes += wire
+        stats.raw_bytes += raw
+        stats.count += 1
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + wire
+        if keep_ops:
+            stats.ops.append(
+                {"kind": kind, "out": out_shape[:80], "bytes": raw, "group": g}
+            )
+    return stats
+
+
+def op_histogram(hlo_text: str) -> Dict[str, int]:
+    hist: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            hist[m.group(3)] = hist.get(m.group(3), 0) + 1
+    return hist

@@ -1,0 +1,88 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch × shape) cell.
+
+No device allocation happens here — the same pattern a serving/training
+launcher uses to pre-compile before touching real data.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train.optimizer import AdamW
+from repro.train.steps import init_train_state
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "tokens": S((batch, seq), jnp.int32),
+        "labels": S((batch, seq), jnp.int32),
+    }
+    if cfg.encoder is not None:
+        specs["encoder_frames"] = S(
+            (batch, cfg.encoder.num_frames, cfg.encoder.d_input), jnp.float32
+        )
+    if cfg.mrope_sections:
+        specs["positions_3d"] = S((batch, 3, seq), jnp.int32)
+    return specs
+
+
+def extras_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    ex: Dict[str, Any] = {}
+    if cfg.encoder is not None:
+        ex["encoder_frames"] = S(
+            (batch, cfg.encoder.num_frames, cfg.encoder.d_input), jnp.float32
+        )
+    if cfg.mrope_sections:
+        ex["positions_3d"] = S((batch, 3, seq), jnp.int32)
+    return ex
+
+
+def state_specs(cfg: ModelConfig, optimizer: Optional[AdamW] = None):
+    opt = optimizer or AdamW()
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, k, opt), jax.random.PRNGKey(0)
+    )
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int):
+    return jax.eval_shape(lambda: M.init_decode_cache(cfg, batch, capacity, pos=0))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, optimizer: Optional[AdamW] = None):
+    """Returns (kind, args_tuple_of_specs) for the cell's step function.
+
+    train   -> (state, batch)
+    prefill -> (params, tokens, extras)
+    decode  -> (params, cache, tokens, extras)   # one token @ pos=seq-1
+    """
+    sh = SHAPES[shape_name]
+    b, seq, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    if kind == "train":
+        return "train", (state_specs(cfg, optimizer), batch_specs(cfg, b, seq))
+    if kind == "prefill":
+        return "prefill", (
+            params_specs(cfg),
+            S((b, seq), jnp.int32),
+            extras_specs(cfg, b, seq),
+        )
+    # decode: a KV cache of seq_len; the new token is written at seq_len-1
+    extras = {}
+    if cfg.mrope_sections:
+        extras["positions_3d"] = S((b, 3, 1), jnp.int32)
+    return "decode", (
+        params_specs(cfg),
+        cache_specs(cfg, b, seq),
+        S((b, 1), jnp.int32),
+        extras,
+    )

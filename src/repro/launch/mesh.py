@@ -1,0 +1,50 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the pod
+axis is pure data parallelism over the (slow) DCN links.
+
+Functions, not module constants: importing this module never touches jax
+device state.  The dry-run process forces 512 host platform devices via
+XLA_FLAGS *before* any jax import (see dryrun.py); in that process the
+single-pod mesh uses the first 256 devices.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import AxisType
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    if len(devices) > need:  # e.g. 512 forced devices, single-pod mesh
+        from jax.sharding import Mesh
+
+        return Mesh(np.asarray(devices[:need]).reshape(shape), axes)
+    raise RuntimeError(
+        f"need {need} devices for {shape} mesh, have {len(devices)}; "
+        "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+        "importing jax (dryrun.py does this)"
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    import jax
+    from jax.sharding import Mesh
+
+    devices = jax.devices()[: data * model]
+    return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

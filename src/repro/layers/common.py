@@ -1,0 +1,64 @@
+"""Shared primitives: init, norms, activations, sharding hints."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def dense_init(rng, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (LeCun-ish), matching common LM practice."""
+    if scale is None:
+        fan_in = shape[0] if len(shape) >= 2 else max(1, shape[-1])
+        scale = 1.0 / math.sqrt(fan_in)
+    return scale * jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def activation_fn(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name in ("swiglu", "geglu", "silu"):
+        return jax.nn.silu if name in ("swiglu", "silu") else jax.nn.gelu
+    raise ValueError(name)
+
+
+class ShardCtx:
+    """Carries the mesh + logical axis mapping for activation constraints.
+
+    ``hint`` is a no-op when mesh is None (single-device smoke tests) so the
+    model code is mesh-agnostic.
+    """
+
+    def __init__(self, mesh=None, dp: Sequence[str] = ("data",), tp: str = "model"):
+        self.mesh = mesh
+        self.dp = tuple(dp)
+        self.tp = tp
+
+    def hint(self, x, *spec):
+        if self.mesh is None:
+            return x
+        resolved = []
+        for s in spec:
+            if s == "DP":
+                resolved.append(self.dp if len(self.dp) > 1 else self.dp[0])
+            elif s == "TP":
+                resolved.append(self.tp)
+            else:
+                resolved.append(s)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*resolved))
+        )
+
+
+NULL_CTX = ShardCtx(mesh=None)

@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / plain GeLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import activation_fn, dense_init
+
+
+def init_ffn(rng, d_model: int, d_ff: int, activation: str, dtype):
+    ks = jax.random.split(rng, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_out": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if activation in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def apply_ffn(params, x, activation: str, dtype, pet=None):
+    act = activation_fn(activation)
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(dtype))
+    if "w_gate" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    # pet=bf16 halves the TP partial-sum all-reduce (see ModelConfig)
+    return jnp.einsum(
+        "bsf,fd->bsd", h, params["w_out"].astype(dtype), preferred_element_type=pet
+    ).astype(dtype)

@@ -1,0 +1,162 @@
+"""Mixture-of-Experts FFN with two interchangeable implementations.
+
+``dense``  — MeshTF/flaxformer-style one-hot dispatch/combine einsums with a
+             fixed per-sequence capacity.  Fully XLA-SPMD friendly: expert
+             weights shard over the tensor axis (EP) and XLA derives the
+             all-to-all-free schedule.  Baseline for the roofline.
+``ragged`` — beyond-baseline path: per-shard token sort + grouped matmul
+             (``jax.lax.ragged_dot``), removing the one-hot dispatch FLOPs.
+             Used by the hillclimb (§Perf); dispatch becomes data movement
+             instead of matmul work.
+
+Both return (y, aux_metrics) where aux contains the load-balancing loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import activation_fn, dense_init
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def init_moe(rng, cfg: ModelConfig, moe: MoEConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], (d, moe.num_experts), dtype, scale=0.02),
+        "w_in": dense_init(ks[1], (moe.num_experts, d, moe.d_ff_expert), dtype),
+        "w_gate": dense_init(ks[2], (moe.num_experts, d, moe.d_ff_expert), dtype),
+        "w_out": dense_init(ks[3], (moe.num_experts, moe.d_ff_expert, d), dtype),
+    }
+    if moe.num_shared_experts:
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_in": dense_init(sk[0], (d, moe.d_ff_shared), dtype),
+            "w_gate": dense_init(sk[1], (d, moe.d_ff_shared), dtype),
+            "w_out": dense_init(sk[2], (moe.d_ff_shared, d), dtype),
+        }
+    return p
+
+
+def _capacity(moe: MoEConfig, seq: int) -> int:
+    cap = int(math.ceil(moe.experts_per_token * seq * moe.capacity_factor / moe.num_experts))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def _router(params, x, moe: MoEConfig):
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, moe.experts_per_token)  # (B,S,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # load-balance auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(ids[..., 0], moe.num_experts), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = moe.num_experts * jnp.sum(density * mean_probs)
+    return gate, ids, aux
+
+
+def apply_moe_dense(params, x, cfg: ModelConfig, moe: MoEConfig, dtype):
+    """Dispatch cost is O(B·S·E·C·d) with C = k·cf·group/E — i.e. QUADRATIC
+    in the group length.  ``moe.group_size`` re-chunks the sequence into
+    groups so the dispatch one-hots stay small (§Perf lever)."""
+    b0, s0, d0 = x.shape
+    g = moe.group_size or s0
+    if 0 < g < s0 and s0 % g == 0:
+        x = x.reshape(b0 * (s0 // g), g, d0)
+    b, s, d = x.shape
+    k, e = moe.experts_per_token, moe.num_experts
+    cap = _capacity(moe, s)
+    gate, ids, aux = _router(params, x, moe)
+
+    mask = jax.nn.one_hot(ids, e, dtype=jnp.int32)  # (B,S,k,E)
+    flat = mask.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1  # 0-based slot, -1 where unrouted
+    pos = pos.reshape(b, s, k, e)
+    keep = (pos >= 0) & (pos < cap) & (mask > 0)
+
+    dispatch = jnp.zeros((b, s, e, cap), dtype)
+    combine = jnp.zeros((b, s, e, cap), dtype)
+    for j in range(k):  # k is small (≤4); keeps peak memory at one (B,S,E,C)
+        oh = jax.nn.one_hot(jnp.clip(pos[:, :, j, :], 0, cap - 1), cap, dtype=dtype)
+        oh = oh * keep[:, :, j, :, None].astype(dtype)
+        dispatch = dispatch + oh
+        combine = combine + oh * gate[:, :, j, None, None].astype(dtype)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch, x)  # (E,B,C,d)
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("ebcd,edf->ebcf", xin, params["w_in"].astype(dtype))
+    gt = jnp.einsum("ebcd,edf->ebcf", xin, params["w_gate"].astype(dtype))
+    h = act(gt) * h
+    yout = jnp.einsum(
+        "ebcf,efd->ebcd", h, params["w_out"].astype(dtype),
+        preferred_element_type=cfg.reduce_pet,
+    ).astype(dtype)
+    y = jnp.einsum(
+        "ebcd,bsec->bsd", yout, combine, preferred_element_type=cfg.reduce_pet
+    ).astype(dtype)
+
+    y = y + _shared(params, x, cfg, dtype)
+    if y.shape[:2] != (b0, s0):
+        y = y.reshape(b0, s0, d0)
+    return y, {"moe_aux": aux}
+
+
+def apply_moe_ragged(params, x, cfg: ModelConfig, moe: MoEConfig, dtype):
+    """Sort tokens by expert, run one grouped matmul per weight (ragged_dot).
+
+    No one-hot dispatch matmuls: routing becomes a gather/scatter.  Inside
+    jit/SPMD this is applied per data shard (token dim sharded over DP axes);
+    expert weights stay sharded over the tensor axis.
+    """
+    b, s, d = x.shape
+    k, e = moe.experts_per_token, moe.num_experts
+    gate, ids, aux = _router(params, x, moe)
+
+    tokens = x.reshape(b * s, d)
+    flat_ids = ids.reshape(b * s, k)
+    flat_gate = gate.reshape(b * s, k).astype(dtype)
+
+    # replicate each token k times, sort the (token, expert) pairs by expert
+    rep_ids = flat_ids.reshape(-1)                      # (T*k,)
+    rep_tok = jnp.repeat(jnp.arange(b * s), k)          # (T*k,)
+    order = jnp.argsort(rep_ids, stable=True)
+    sorted_tok = rep_tok[order]
+    group_sizes = jnp.bincount(rep_ids, length=e).astype(jnp.int32)
+
+    gathered = tokens[sorted_tok]                       # (T*k, d)
+    act = activation_fn(cfg.activation)
+    h = jax.lax.ragged_dot(gathered, params["w_in"].astype(dtype), group_sizes)
+    g = jax.lax.ragged_dot(gathered, params["w_gate"].astype(dtype), group_sizes)
+    h = act(g) * h
+    out = jax.lax.ragged_dot(h, params["w_out"].astype(dtype), group_sizes)  # (T*k, d)
+
+    w = flat_gate.reshape(-1)[order][:, None]
+    y = jnp.zeros((b * s, d), dtype).at[sorted_tok].add(out * w)
+    y = y.reshape(b, s, d)
+    y = y + _shared(params, x, cfg, dtype)
+    return y, {"moe_aux": aux}
+
+
+def _shared(params, x, cfg: ModelConfig, dtype):
+    if "shared" not in params:
+        return jnp.zeros_like(x)
+    sp = params["shared"]
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("bsd,df->bsf", x, sp["w_in"].astype(dtype))
+    g = jnp.einsum("bsd,df->bsf", x, sp["w_gate"].astype(dtype))
+    return jnp.einsum(
+        "bsf,fd->bsd", act(g) * h, sp["w_out"].astype(dtype),
+        preferred_element_type=cfg.reduce_pet,
+    ).astype(dtype)
+
+
+def apply_moe(params, x, cfg: ModelConfig, moe: MoEConfig, dtype):
+    if moe.impl == "ragged":
+        return apply_moe_ragged(params, x, cfg, moe, dtype)
+    return apply_moe_dense(params, x, cfg, moe, dtype)

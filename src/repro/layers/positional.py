@@ -1,0 +1,53 @@
+"""Positional encodings: RoPE, M-RoPE (Qwen2-VL), sinusoidal."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (..., S) int -> angles (..., S, head_dim//2) f32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def mrope_angles(positions_3d, head_dim: int, theta: float, sections: Tuple[int, ...]):
+    """M-RoPE: frequency bands are split across (temporal, height, width)
+    position streams.  positions_3d: (B, 3, S).  sections sum to head_dim//2.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    # Pick, for each frequency band, which positional stream drives it.
+    sel = np.concatenate(
+        [np.full((s,), i, dtype=np.int32) for i, s in enumerate(sections)]
+    )  # (half,)
+    # (B, half, S): positional stream per frequency band
+    pos = jnp.take(positions_3d.astype(jnp.float32), sel, axis=1)
+    return jnp.swapaxes(pos, 1, 2)[..., :] * inv_freq  # (B, S, half)
+
+
+def apply_rope(x, angles):
+    """x: (B, S, H, D); angles: (S, D/2) or (B, S, D/2)."""
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]  # (B,S,1,D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(length: int, dim: int, dtype=jnp.float32):
+    pos = np.arange(length, dtype=np.float32)[:, None]
+    i = np.arange(dim // 2, dtype=np.float32)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    emb = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(emb, dtype=dtype)
+
+
+def default_positions(batch: int, seq: int, offset=0):
+    return offset + jnp.arange(seq, dtype=jnp.int32)[None, :].repeat(batch, 0)

@@ -1,0 +1,104 @@
+"""Griffin-style gated linear recurrent unit (RG-LRU) block.
+
+    r_t = sigmoid(W_a u_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x u_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the (a, b) linear
+recurrence; decode is a single fused step.  The Pallas ``rglru_scan`` kernel
+(repro.kernels.rglru) implements the same contraction blocked over time for
+real TPU runs; this module is the XLA path used by the SPMD dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import dense_init
+
+C_CONST = 8.0
+
+
+def init_rglru(rng, d_model: int, width: int, conv_width: int, dtype, num_heads: int = 1):
+    """Gate projections are block-diagonal over ``num_heads`` blocks, as in
+    Griffin (keeps RG-LRU parameter count linear-ish in width)."""
+    ks = jax.random.split(rng, 7)
+    hb = width // num_heads
+    return {
+        "wx": dense_init(ks[0], (d_model, width), dtype),
+        "wg": dense_init(ks[1], (d_model, width), dtype),
+        "conv_w": dense_init(ks[2], (conv_width, width), dtype, scale=0.1),
+        "conv_b": jnp.zeros((width,), dtype),
+        "wa": dense_init(ks[3], (num_heads, hb, hb), dtype),
+        "ba": jnp.zeros((width,), dtype),
+        "wi": dense_init(ks[4], (num_heads, hb, hb), dtype),
+        "bi": jnp.zeros((width,), dtype),
+        # init Λ so that a ∈ ~(0.9, 0.999) at r=0.5, like Griffin
+        "lam": jax.random.uniform(ks[5], (width,), jnp.float32, 0.3, 0.8).astype(dtype),
+        "wo": dense_init(ks[6], (width, d_model), dtype),
+    }
+
+
+def _block_diag(u, w):
+    """u: (B,S,W); w: (H, W/H, W/H) block-diagonal projection."""
+    b, s, width = u.shape
+    h = w.shape[0]
+    ub = u.reshape(b, s, h, width // h)
+    return jnp.einsum("bshw,hwv->bshv", ub, w).reshape(b, s, width)
+
+
+def _causal_conv(u, conv_w, conv_b, history=None):
+    """Depthwise causal conv along time.  u: (B,S,W); conv_w: (CW, W)."""
+    cw = conv_w.shape[0]
+    if history is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = history  # (B, cw-1, W) trailing inputs from previous segment
+    full = jnp.concatenate([pad, u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(cw):  # cw is 4: unrolled taps keep HLO trivial
+        out = out + full[:, i : i + u.shape[1]] * conv_w[cw - 1 - i][None, None, :]
+    return out + conv_b[None, None, :], full[:, -(cw - 1) :]
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid(_block_diag(u, params["wa"]) + params["ba"])
+    i = jax.nn.sigmoid(_block_diag(u, params["wi"]) + params["bi"])
+    log_a = (-C_CONST * jax.nn.softplus(params["lam"].astype(jnp.float32))) * r.astype(
+        jnp.float32
+    )
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, (beta * (i.astype(jnp.float32) * u.astype(jnp.float32)))
+
+
+def apply_rglru(params, x, dtype, h0=None, conv_hist=None):
+    """x: (B,S,d) -> (y, (h_last, conv_hist)). Full-sequence path."""
+    u = jnp.einsum("bsd,dw->bsw", x, params["wx"].astype(dtype))
+    g = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["wg"].astype(dtype)))
+    u, hist = _causal_conv(u, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype), conv_hist)
+    a, b = _gates(params, u)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    # linear recurrence h_t = a_t h_{t-1} + b_t via associative scan (f32)
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = jnp.einsum("bsw,wd->bsd", h.astype(dtype) * g, params["wo"].astype(dtype))
+    return y, (h[:, -1], hist)  # carried state stays f32
+
+
+def apply_rglru_step(params, x, state, dtype):
+    """Single decode step. x: (B,1,d); state = (h_prev (B,W), conv_hist)."""
+    h_prev, conv_hist = state
+    u = jnp.einsum("bsd,dw->bsw", x, params["wx"].astype(dtype))
+    g = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["wg"].astype(dtype)))
+    u, hist = _causal_conv(u, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype), conv_hist)
+    a, b = _gates(params, u)
+    h = a[:, 0] * h_prev.astype(jnp.float32) + b[:, 0]  # carried state stays f32
+    y = jnp.einsum("bw,wd->bd", h.astype(dtype) * g[:, 0], params["wo"].astype(dtype))[:, None]
+    return y, (h, hist)

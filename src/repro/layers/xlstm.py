@@ -1,0 +1,246 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory with exponential gating, inherently sequential).
+
+mLSTM recurrence (per head, scalar gates i_t, f_t):
+    m_t = max(log f_t + m_{t-1}, log i_t)                    (stabilizer)
+    C_t = exp(log f_t + m_{t-1} - m_t) C_{t-1} + exp(log i_t - m_t) k_t v_tᵀ
+    n_t = exp(log f_t + m_{t-1} - m_t) n_{t-1} + exp(log i_t - m_t) k_t
+    h_t = C_tᵀ q_t / max(|n_tᵀ q_t|, 1)
+
+Training/prefill runs the chunkwise-parallel form (intra-chunk quadratic,
+inter-chunk recurrence over chunk summaries) — O(S·c) not O(S²) — which is
+why xlstm runs the long_500k cell.  Decode is the O(1) recurrent step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import dense_init
+
+
+# ---------------------------------------------------------------- mLSTM
+
+
+def init_mlstm(rng, d_model: int, num_heads: int, proj_factor: float, dtype):
+    dp = int(d_model * proj_factor)
+    dp = ((dp + 127) // 128) * 128
+    hd = dp // num_heads
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_up": dense_init(ks[0], (d_model, dp), dtype),
+        "w_gate_up": dense_init(ks[1], (d_model, dp), dtype),
+        # block-diagonal q/k/v over heads, as in the official xLSTM blocks
+        "wq": dense_init(ks[2], (num_heads, hd, hd), dtype),
+        "wk": dense_init(ks[3], (num_heads, hd, hd), dtype),
+        "wv": dense_init(ks[4], (num_heads, hd, hd), dtype),
+        "w_if": dense_init(ks[5], (d_model, 2 * num_heads), dtype, scale=0.02),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((num_heads,)), 3.0 * jnp.ones((num_heads,))]
+        ).astype(dtype),
+        "w_down": dense_init(ks[6], (dp, d_model), dtype),
+        "skip": jnp.ones((dp,), dtype),  # learnable per-channel skip
+    }
+
+
+def _mlstm_qkv(params, x, num_heads: int, dtype):
+    b, s, _ = x.shape
+    u = jnp.einsum("bsd,dp->bsp", x, params["w_up"].astype(dtype))
+    gate = jax.nn.silu(jnp.einsum("bsd,dp->bsp", x, params["w_gate_up"].astype(dtype)))
+    dp = u.shape[-1]
+    hd = dp // num_heads
+    uh = u.reshape(b, s, num_heads, hd)
+    q = jnp.einsum("bshd,hde->bshe", uh, params["wq"].astype(dtype))
+    k = jnp.einsum("bshd,hde->bshe", uh, params["wk"].astype(dtype))
+    v = jnp.einsum("bshd,hde->bshe", uh, params["wv"].astype(dtype))
+    k = k / jnp.sqrt(jnp.float32(hd)).astype(dtype)
+    gates = jnp.einsum("bsd,dg->bsg", x, params["w_if"].astype(dtype)) + params["b_if"]
+    log_i, log_f = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,S,H)
+    log_f = -jax.nn.softplus(-log_f)  # log sigmoid
+    return u, gate, q, k, v, log_i, log_f
+
+
+def mlstm_chunkwise(params, x, num_heads: int, chunk: int, dtype, state=None,
+                    unroll: bool = False):
+    """x: (B,S,d).  Returns (y, state).  state = (C, n, m) per head.
+    ``unroll`` replaces the chunk lax.scan with a python loop (dry-run cost
+    accounting mode)."""
+    b, s, d = x.shape
+    u, gate, q, k, v, log_i, log_f = _mlstm_qkv(params, x, num_heads, dtype)
+    hd = q.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    qc = q.reshape(b, nc, c, num_heads, hd)
+    kc = k.reshape(b, nc, c, num_heads, hd)
+    vc = v.reshape(b, nc, c, num_heads, hd)
+    li = log_i.reshape(b, nc, c, num_heads)
+    lf = log_f.reshape(b, nc, c, num_heads)
+    lf_cum = jnp.cumsum(lf, axis=2)  # F_t within chunk (includes f_t)
+    lf_tot = lf_cum[:, :, -1:]       # (b,nc,1,H)
+
+    if state is None:
+        C0 = jnp.zeros((b, num_heads, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, num_heads, hd), jnp.float32)
+        m0 = jnp.full((b, num_heads), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qch, kch, vch, lich, lfcum, lftot = xs  # (b,c,H,hd) etc.
+        # stabilizer candidates: keys contribute at weight F_tot - F_s + i_s
+        w_key = lftot + lich - lfcum  # (b,c,H): log-weight into next state
+        m_key = jnp.max(w_key, axis=1)      # (b,H)
+        m_next = jnp.maximum(lftot[:, 0, :] + m, m_key)
+        # ---- inter-chunk (state) contribution to outputs
+        # query t reads state scaled by exp(F_t + m - m_used); use per-chunk
+        # stabilizer m for the state path and row max for intra path.
+        intra_logits = (
+            lfcum[:, :, None, :] - lfcum[:, None, :, :] + lich[:, None, :, :]
+        )  # (b, tq, ts, H) weight of key s at query t (valid s<=t)
+        tq = jnp.arange(c)[:, None]
+        ts = jnp.arange(c)[None, :]
+        causal = (ts <= tq)[None, :, :, None]
+        intra_logits = jnp.where(causal, intra_logits, -1e30)
+        state_logit = lfcum + m[:, None, :]  # (b,c,H) log-weight of state path
+        m_row = jnp.maximum(jnp.max(intra_logits, axis=2), state_logit)  # (b,c,H)
+        intra_w = jnp.exp(intra_logits - m_row[:, :, None, :]).astype(dtype)
+        scores = jnp.einsum("bthd,bshd->btsh", qch, kch).astype(dtype)
+        intra = jnp.einsum("btsh,btsh,bshd->bthd", scores.astype(jnp.float32).astype(dtype), intra_w, vch)
+        n_intra = jnp.einsum("btsh,btsh->bth", scores.astype(jnp.float32).astype(dtype), intra_w)
+        state_w = jnp.exp(state_logit - m_row)  # (b,c,H)
+        inter = jnp.einsum(
+            "bthd,bhde,bth->bthe", qch.astype(jnp.float32), C, state_w
+        )
+        n_inter = jnp.einsum("bthd,bhd,bth->bth", qch.astype(jnp.float32), n, state_w)
+        num = intra.astype(jnp.float32) + inter
+        den = n_intra.astype(jnp.float32) + n_inter
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # ---- state update
+        kw = jnp.exp(w_key - m_key[:, None, :])  # (b,c,H)
+        C_new = jnp.exp(lftot[:, 0, :] + m - m_next)[:, :, None, None] * C + jnp.einsum(
+            "bshd,bsh,bshe->bhde",
+            kch.astype(jnp.float32),
+            jnp.exp(m_key[:, None, :] - m_next[:, None, :]) * kw,
+            vch.astype(jnp.float32),
+        )
+        n_new = jnp.exp(lftot[:, 0, :] + m - m_next)[:, :, None] * n + jnp.einsum(
+            "bshd,bsh->bhd",
+            kch.astype(jnp.float32),
+            jnp.exp(m_key[:, None, :] - m_next[:, None, :]) * kw,
+        )
+        return (C_new, n_new, m_next), h.astype(dtype)
+
+    xs = (
+        jnp.moveaxis(qc, 1, 0),
+        jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(li, 1, 0),
+        jnp.moveaxis(lf_cum, 1, 0),
+        jnp.moveaxis(lf_tot, 1, 0),
+    )
+    if unroll:
+        carry = (C0, n0, m0)
+        hs_list = []
+        for ci in range(nc):
+            carry, hout = chunk_step(carry, jax.tree_util.tree_map(lambda t: t[ci], xs))
+            hs_list.append(hout)
+        C, n, m = carry
+        hs = jnp.stack(hs_list)
+    else:
+        (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, num_heads * hd)
+    h = h + u * params["skip"].astype(dtype)
+    y = jnp.einsum("bsp,pd->bsd", h * gate, params["w_down"].astype(dtype))
+    return y, (C, n, m)
+
+
+def mlstm_step(params, x, state, num_heads: int, dtype):
+    """Single-token decode. x: (B,1,d); state=(C,n,m)."""
+    b = x.shape[0]
+    C, n, m = state
+    u, gate, q, k, v, log_i, log_f = _mlstm_qkv(params, x, num_heads, dtype)
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]  # (B,H,hd)
+    li, lf = log_i[:, 0], log_f[:, 0]  # (B,H)
+    m_next = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_next)[:, :, None, None]
+    iw = jnp.exp(li - m_next)[:, :, None, None]
+    C = fw * C + iw * jnp.einsum("bhd,bhe->bhde", k1.astype(jnp.float32), v1.astype(jnp.float32))
+    n = fw[..., 0] * n + iw[..., 0] * k1.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q1.astype(jnp.float32), C)
+    den = jnp.einsum("bhd,bhd->bh", q1.astype(jnp.float32), n)
+    h = (num / jnp.maximum(jnp.abs(den), 1.0)[..., None]).astype(dtype)
+    h = h.reshape(b, 1, -1)
+    h = h + u * params["skip"].astype(dtype)
+    y = jnp.einsum("bsp,pd->bsd", h * gate, params["w_down"].astype(dtype))
+    return y, (C, n, m_next)
+
+
+def mlstm_sequential_ref(params, x, num_heads: int, dtype):
+    """Pure per-step recurrence — oracle for the chunkwise form (tests)."""
+    b, s, d = x.shape
+    dp = params["w_up"].shape[1]
+    hd = dp // num_heads
+    state = (
+        jnp.zeros((b, num_heads, hd, hd), jnp.float32),
+        jnp.zeros((b, num_heads, hd), jnp.float32),
+        jnp.full((b, num_heads), -1e30, jnp.float32),
+    )
+    ys = []
+    for t in range(s):
+        y, state = mlstm_step(params, x[:, t : t + 1], state, num_heads, dtype)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), state
+
+
+# ---------------------------------------------------------------- sLSTM
+
+
+def init_slstm(rng, d_model: int, num_heads: int, dtype):
+    hd = d_model // num_heads
+    ks = jax.random.split(rng, 3)
+    wi = dense_init(ks[0], (d_model, 4 * d_model), dtype)
+    # block-diagonal recurrent weights, one (hd, hd) block per head per gate
+    rk = dense_init(ks[1], (4, num_heads, hd, hd), dtype, scale=1.0 / hd**0.5)
+    bias = jnp.zeros((4 * d_model,), dtype)
+    return {"w_in": wi, "r": rk, "b": bias, "w_out": dense_init(ks[2], (d_model, d_model), dtype)}
+
+
+def slstm_scan(params, x, num_heads: int, dtype, state=None):
+    """x: (B,S,d) -> (y, state). Sequential lax.scan over time (inherent)."""
+    b, s, d = x.shape
+    hd = d // num_heads
+    pre = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dtype)) + params["b"]
+    pre = pre.reshape(b, s, 4, num_heads, hd).astype(jnp.float32)
+
+    if state is None:
+        zeros = jnp.zeros((b, num_heads, hd), jnp.float32)
+        state = (zeros, zeros, jnp.full((b, num_heads, hd), -1e30, jnp.float32), zeros)
+    r = params["r"].astype(jnp.float32)
+
+    def step(carry, xt):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhd,ghde->bghe", h, r)  # (b,4,H,hd)
+        zt, it, ft, ot = [xt[:, g] + rec[:, g] for g in range(4)]
+        z = jnp.tanh(zt)
+        o = jax.nn.sigmoid(ot)
+        m_new = jnp.maximum(ft + m, it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(ft + m - m_new)
+        c = f * c + i * z
+        n = f * n + i
+        h_new = o * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h_new), h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(dtype)
+    y = jnp.einsum("bsd,de->bse", h, params["w_out"].astype(dtype))
+    return y, state
+
+
+def slstm_step(params, x, state, num_heads: int, dtype):
+    y, state = slstm_scan(params, x, num_heads, dtype, state=state)
+    return y, state

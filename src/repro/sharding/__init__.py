@@ -1,0 +1,6 @@
+from repro.sharding.specs import (  # noqa: F401
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+    state_pspecs,
+)

@@ -1,0 +1,176 @@
+"""Partition-spec rules: map parameter/batch/cache pytrees to PartitionSpecs.
+
+Strategies
+----------
+``tp``       Megatron tensor parallelism over the ``model`` axis only;
+             params replicated over data axes (small models).
+``fsdp_tp``  TP over ``model`` + FSDP/ZeRO-style sharding of the remaining
+             large parameter dim (and optimizer state) over ``data``
+             (large models; XLA inserts the per-layer gathers).
+
+Multi-pod meshes add a leading ``pod`` axis used purely for data
+parallelism: batch shards over ("pod","data"), parameters stay replicated
+across pods, so gradient sync over the slow DCN axis is one all-reduce.
+
+Recurrent-block params (rglru / mlstm / slstm) do not TP-shard: their head
+counts (10, 4) don't divide the 16-wide model axis (see DESIGN.md §5);
+they still FSDP over ``data``.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.utils.tree import map_with_path
+
+MODEL = "model"
+DATA = "data"
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def _div(n: int, d: int) -> bool:
+    return n % d == 0 and n >= d
+
+
+def param_pspecs(cfg: ModelConfig, shapes, mesh, strategy: str = "fsdp_tp"):
+    """shapes: pytree of ShapeDtypeStruct (from eval_shape of init)."""
+    msz = _axis_size(mesh, MODEL)
+    dsz = _axis_size(mesh, DATA)
+    fsdp = strategy == "fsdp_tp"
+
+    def fsdp_dim(shape, taken: Sequence[int]) -> Optional[int]:
+        """largest dim not already sharded, divisible by data axis."""
+        if not fsdp:
+            return None
+        cand = [
+            (size, i)
+            for i, size in enumerate(shape)
+            if i not in taken and _div(size, dsz)
+        ]
+        if not cand:
+            return None
+        return max(cand)[1]
+
+    def spec_for(path: str, x) -> P:
+        shape = x.shape
+        ndim = len(shape)
+        lead = 1 if re.search(r"stages/\d+/\d+/", path) else 0  # layer-stack dim
+        axes: list = [None] * ndim
+
+        def tp(dim_from_end_or_idx: int):
+            """try to TP-shard absolute index (after lead offset)."""
+            i = dim_from_end_or_idx
+            if 0 <= i < ndim and _div(shape[i], msz):
+                axes[i] = MODEL
+                return True
+            return False
+
+        name = path.split("/")[-1]
+        parent = path.split("/")[-2] if "/" in path else ""
+
+        if path == "embed" or name == "embed":
+            if cfg.shard_vocab_embed:
+                tp(0)  # vocab parallelism
+            elif _div(shape[-1], dsz):
+                axes[-1] = DATA  # d over data; token gather stays local
+        elif name == "lm_head":
+            tp(1)  # vocab
+        elif parent == "attn" or parent == "cross":
+            if name == "wq":
+                tp(lead + 1)  # heads
+            elif name in ("wk", "wv"):
+                tp(lead + 1)  # kv heads if divisible, else replicated
+            elif name == "wo":
+                tp(lead + 0)  # heads (contraction -> psum output)
+        elif parent in ("ffn", "shared"):
+            if name in ("w_in", "w_gate"):
+                tp(lead + 1)
+            elif name == "w_out":
+                tp(lead + 0)
+        elif parent == "moe":
+            if name in ("w_in", "w_gate"):
+                tp(lead + 0) or tp(lead + 2)  # experts, else expert-ff
+            elif name == "w_out":
+                tp(lead + 0) or tp(lead + 1)
+            # router stays replicated over model
+        # recurrent blocks (rglru/mlstm/slstm): no TP (head counts don't
+        # divide the model axis) — FSDP only.
+
+        taken = [i for i, a in enumerate(axes) if a is not None]
+        if lead:
+            taken.append(0)  # never shard the layer-stack dim
+        big = math.prod(shape) if shape else 0
+        if big >= 1 << 16 and DATA not in axes:  # don't double-use the axis
+            fd = fsdp_dim(shape, taken)
+            if fd is not None:
+                axes[fd] = DATA
+        return P(*axes)
+
+    return map_with_path(spec_for, shapes)
+
+
+def state_pspecs(cfg: ModelConfig, state_shapes, mesh, strategy: str = "fsdp_tp"):
+    """Shardings for the full train state {params, opt{mu,nu,master?,count}, step}.
+
+    Optimizer moments follow their parameter's spec (ZeRO-1-ish when
+    strategy shards params over data).
+    """
+    pspec = param_pspecs(cfg, state_shapes["params"], mesh, strategy)
+    out = {"params": pspec, "opt": {}, "step": P()}
+    for key in state_shapes["opt"]:
+        if key == "count":
+            out["opt"][key] = P()
+        else:
+            out["opt"][key] = pspec
+    return out
+
+
+def batch_pspecs(batch_shapes, mesh, dp_axes: Tuple[str, ...]):
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    dp_size = math.prod(_axis_size(mesh, a) for a in dp_axes)
+
+    def spec_for(path: str, x):
+        if x.ndim == 0:
+            return P()
+        if _div(x.shape[0], dp_size):
+            return P(dp, *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    return map_with_path(spec_for, batch_shapes)
+
+
+def cache_pspecs(cache_shapes, mesh, dp_axes: Tuple[str, ...]):
+    """Decode-cache rule: batch dim over DP axes when divisible; then the
+    first later axis divisible by the model axis shards over ``model``
+    (seq-sharded KV — flash-decode combines are small psums)."""
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    dp_size = math.prod(_axis_size(mesh, a) for a in dp_axes)
+    msz = _axis_size(mesh, MODEL)
+
+    def spec_for(path: str, x):
+        if x.ndim == 0:
+            return P()
+        axes: list = [None] * x.ndim
+        start = 0
+        # caches of scanned stages carry a leading layer-stack dim; detect by
+        # path ("stages/...") and skip it
+        if path.startswith("stages/"):
+            start = 1
+        if x.ndim > start and _div(x.shape[start], dp_size):
+            axes[start] = dp
+        for i in range(start + 1, x.ndim):
+            if _div(x.shape[i], msz):
+                axes[i] = MODEL
+                break
+        return P(*axes)
+
+    return map_with_path(spec_for, cache_shapes)

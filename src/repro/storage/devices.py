@@ -1,0 +1,54 @@
+"""Storage device performance models (paper Table 2).
+
+IOPS are 4 KiB-operation rates; the time to service an access pattern is
+    T = pages / IOPS(pattern type)
+which is exactly the granularity the paper reasons at.  These models let a
+CPU-only box reproduce Figs 10/11/13 as a faithful cost model, and they
+drive the I/O simulator used by the training-time benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PAGE = 4096
+
+
+@dataclass(frozen=True)
+class StorageModel:
+    name: str
+    seq_read_iops: float
+    seq_write_iops: float
+    rand_read_iops: float
+    rand_write_iops: float
+
+    # ------------------------------------------------------------- times
+    def t_seq_read(self, nbytes: float) -> float:
+        return self._pages(nbytes) / self.seq_read_iops
+
+    def t_seq_write(self, nbytes: float) -> float:
+        return self._pages(nbytes) / self.seq_write_iops
+
+    def t_rand_read(self, n_ios: float, nbytes: float = 0.0) -> float:
+        """n_ios random operations moving nbytes total.  Each random op
+        pays the random-IOPS cost; volume beyond one page per op streams
+        at sequential speed."""
+        pages = self._pages(nbytes)
+        extra = max(0.0, pages - n_ios)
+        return n_ios / self.rand_read_iops + extra / self.seq_read_iops
+
+    def t_rand_write(self, n_ios: float, nbytes: float = 0.0) -> float:
+        pages = self._pages(nbytes)
+        extra = max(0.0, pages - n_ios)
+        return n_ios / self.rand_write_iops + extra / self.seq_write_iops
+
+    @staticmethod
+    def _pages(nbytes: float) -> float:
+        return max(1.0, nbytes / PAGE) if nbytes > 0 else 0.0
+
+
+# Table 2 of the paper
+HDD = StorageModel("HDD-WD10EZEX", 40_000, 36_000, 600, 300)
+SSD = StorageModel("SSD-Intel-750", 563_000, 230_000, 430_000, 230_000)
+OPTANE = StorageModel("OptaneSSD-P4800X", 614_000, 512_000, 550_000, 500_000)
+
+STORAGE_MODELS = {"hdd": HDD, "ssd": SSD, "optane": OPTANE}

@@ -1,0 +1,48 @@
+"""LRU page-cache simulator.
+
+Models the host main-memory page cache the paper reasons about in §4.1
+(page-aware shuffling): when instance_size < page size and instances are
+fetched in random order, most of each loaded page is evicted unused and
+later re-fetched — redundant page transfers.  The simulator counts those
+transfers so Fig 11 reproduces without real block devices.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Iterable
+
+
+class LRUPageCache:
+    def __init__(self, capacity_pages: int):
+        assert capacity_pages > 0
+        self.capacity = capacity_pages
+        self._lru: OrderedDict[int, None] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def access(self, page: int) -> bool:
+        """Returns True on hit."""
+        if page in self._lru:
+            self._lru.move_to_end(page)
+            self.hits += 1
+            return True
+        self.misses += 1
+        self._lru[page] = None
+        if len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+        return False
+
+    def access_many(self, pages: Iterable[int]) -> int:
+        m0 = self.misses
+        for p in pages:
+            self.access(p)
+        return self.misses - m0
+
+    @property
+    def transfers(self) -> int:
+        """Pages moved storage -> memory (i.e. misses)."""
+        return self.misses
+
+    def reset(self):
+        self._lru.clear()
+        self.hits = self.misses = 0

@@ -1,0 +1,213 @@
+"""Binary record store with O(1) random record access (the NVM side of LIRS).
+
+Format ("RREC"):
+    header (32 B): magic  b"RREC" | version u32 | flags u32 (bit0: variable
+    length) | num_records u64 | record_size u64 (0 when variable)
+    payload: fixed-size records back-to-back, or, when variable,
+    ``u32 length || bytes`` per record (sparse datasets — webspam/kdd style).
+
+The store deliberately does NOT persist an offset index for variable data:
+locating records is the job of the paper's *Data-Format-Aware Location
+Generator* (repro.core.location), which does one sequential scan — exactly
+the pre-processing cost the paper accounts for sparse formats.
+
+All reads go through ``os.pread`` (no mmap): each call is an explicit I/O
+system call, mirroring the paper's access model, and the store counts
+sequential vs random page touches for the storage cost model.
+"""
+from __future__ import annotations
+
+import io
+import os
+import struct
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional, Sequence
+
+import numpy as np
+
+MAGIC = b"RREC"
+VERSION = 1
+HEADER = struct.Struct("<4sIIQQ4x")  # padded to 32 B
+HEADER_SIZE = 32
+assert HEADER.size == HEADER_SIZE
+PAGE = 4096  # OS virtual page size (paper §4.1)
+
+FLAG_VARIABLE = 1
+
+
+@dataclass
+class IOStats:
+    random_reads: int = 0        # read syscalls issued at random offsets
+    sequential_reads: int = 0    # read syscalls issued sequentially
+    bytes_read: int = 0
+    pages_read: int = 0          # distinct page frames touched per syscall
+    last_offset: int = -1
+
+    def account(self, offset: int, length: int):
+        first_page = offset // PAGE
+        last_page = (offset + max(length, 1) - 1) // PAGE
+        pages = last_page - first_page + 1
+        if offset == self.last_offset:
+            self.sequential_reads += 1
+        else:
+            self.random_reads += 1
+        self.bytes_read += length
+        self.pages_read += pages
+        self.last_offset = offset + length
+
+    def reset(self):
+        self.random_reads = self.sequential_reads = 0
+        self.bytes_read = self.pages_read = 0
+        self.last_offset = -1
+
+
+class RecordWriter:
+    """Sequentially writes a record file (fixed or variable length)."""
+
+    def __init__(self, path: str, record_size: Optional[int] = None):
+        self.path = path
+        self.record_size = record_size
+        self.count = 0
+        self._f = open(path, "wb")
+        flags = 0 if record_size else FLAG_VARIABLE
+        self._f.write(
+            HEADER.pack(MAGIC, VERSION, flags, 0, record_size or 0)
+        )
+
+    def append(self, data: bytes):
+        if self.record_size is not None:
+            if len(data) != self.record_size:
+                raise ValueError(
+                    f"fixed record size {self.record_size}, got {len(data)}"
+                )
+            self._f.write(data)
+        else:
+            self._f.write(struct.pack("<I", len(data)))
+            self._f.write(data)
+        self.count += 1
+
+    def close(self):
+        flags = 0 if self.record_size else FLAG_VARIABLE
+        self._f.seek(0)
+        self._f.write(HEADER.pack(MAGIC, VERSION, flags, self.count, self.record_size or 0))
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class RecordStore:
+    """Random-access reader over a record file."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fd = os.open(path, os.O_RDONLY)
+        raw = os.pread(self._fd, HEADER_SIZE, 0)
+        magic, version, flags, count, rsize = HEADER.unpack(raw)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: not a RREC file")
+        self.version = version
+        self.variable = bool(flags & FLAG_VARIABLE)
+        self.num_records = count
+        self.record_size = rsize or None
+        self.stats = IOStats()
+        self.file_size = os.fstat(self._fd).st_size
+        # offsets/lengths are installed by the location generator (sparse)
+        # or derived arithmetically (fixed)
+        self._offsets: Optional[np.ndarray] = None
+        self._lengths: Optional[np.ndarray] = None
+        if not self.variable:
+            self._offsets = HEADER_SIZE + np.arange(count, dtype=np.int64) * rsize
+            self._lengths = np.full(count, rsize, dtype=np.int64)
+
+    # ------------------------------------------------------------- index
+    @property
+    def indexed(self) -> bool:
+        return self._offsets is not None
+
+    def install_index(self, offsets: np.ndarray, lengths: np.ndarray):
+        self._offsets = offsets.astype(np.int64)
+        self._lengths = lengths.astype(np.int64)
+
+    def offsets(self) -> np.ndarray:
+        if self._offsets is None:
+            raise RuntimeError(
+                "variable-length store has no index; run the location "
+                "generator first (repro.core.location)"
+            )
+        return self._offsets
+
+    def lengths(self) -> np.ndarray:
+        self.offsets()
+        return self._lengths
+
+    # -------------------------------------------------------------- read
+    def read(self, idx: int) -> bytes:
+        off = int(self.offsets()[idx])
+        ln = int(self._lengths[idx])
+        if self.variable:
+            off += 4  # skip the u32 length prefix
+        self.stats.account(off, ln)
+        return os.pread(self._fd, ln, off)
+
+    def read_batch(self, indices: Sequence[int]) -> List[bytes]:
+        return [self.read(int(i)) for i in indices]
+
+    def read_range(self, start: int, count: int) -> List[bytes]:
+        """Sequential read of [start, start+count) records (BMF/TFIP path)."""
+        off0 = int(self.offsets()[start])
+        end_idx = start + count - 1
+        off1 = int(self._offsets[end_idx]) + int(self._lengths[end_idx])
+        if self.variable:
+            off1 += 4
+        blob = os.pread(self._fd, off1 - off0, off0)
+        self.stats.account(off0, off1 - off0)
+        out = []
+        for i in range(start, start + count):
+            o = int(self._offsets[i]) - off0
+            ln = int(self._lengths[i])
+            if self.variable:
+                o += 4
+            out.append(blob[o : o + ln])
+        return out
+
+    def scan_sequential(self, chunk_bytes: int = 1 << 20):
+        """Yield (offset, raw_chunk) sequentially over the payload."""
+        pos = HEADER_SIZE
+        while pos < self.file_size:
+            n = min(chunk_bytes, self.file_size - pos)
+            self.stats.account(pos, n)
+            yield pos, os.pread(self._fd, n, pos)
+            pos += n
+
+    # -------------------------------------------------- page-group helpers
+    def page_of(self, idx) -> np.ndarray:
+        """Page id containing the start of each record."""
+        return (self.offsets()[idx] // PAGE).astype(np.int64)
+
+    def page_groups(self) -> List[np.ndarray]:
+        """Consecutive record index ranges grouped by starting page —
+        the unit of the paper's page-aware shuffling."""
+        pages = self.offsets() // PAGE
+        # records are laid out sequentially: group boundaries where page changes
+        cuts = np.flatnonzero(np.diff(pages)) + 1
+        return np.split(np.arange(self.num_records, dtype=np.int64), cuts)
+
+    def close(self):
+        os.close(self._fd)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def write_records(path: str, records: Iterable[bytes], record_size: Optional[int] = None) -> int:
+    with RecordWriter(path, record_size) as w:
+        for r in records:
+            w.append(r)
+        return w.count

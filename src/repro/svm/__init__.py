@@ -1,0 +1,1 @@
+from repro.svm.linear import LinearSVM, svm_objective  # noqa: F401

@@ -1,0 +1,69 @@
+"""Linear SVM substrate (the paper's SVM workload).
+
+L2-regularized squared-hinge (LIBLINEAR's L2-loss SVM objective):
+
+    f(w) = λ/2 ||w||² + (1/N) Σ max(0, 1 − y_i w·x_i)²
+
+trained with mini-batch gradient descent.  BMF trains a *block* at a time
+with several inner passes (mimicking the block-minimization framework);
+LIRS feeds freshly re-shuffled batches each epoch.  The convergence metric
+is the paper's *relative function value difference* (f − f*)/f*.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def svm_objective(w, b, x, y, lam: float):
+    margin = 1.0 - y * (x @ w + b)
+    hinge = jnp.maximum(margin, 0.0)
+    return 0.5 * lam * jnp.sum(w * w) + jnp.mean(hinge * hinge)
+
+
+@jax.jit
+def _step(w, b, x, y, lam, lr):
+    def f(wb):
+        return svm_objective(wb[0], wb[1], x, y, lam)
+
+    loss, (gw, gb) = jax.value_and_grad(f)((w, b))
+    return w - lr * gw, b - lr * gb, loss
+
+
+@jax.jit
+def _objective(w, b, x, y, lam):
+    return svm_objective(w, b, x, y, lam)
+
+
+@dataclass
+class LinearSVM:
+    dim: int
+    lam: float = 1e-4
+    lr: float = 0.05
+
+    def __post_init__(self):
+        self.w = jnp.zeros((self.dim,), jnp.float32)
+        self.b = jnp.zeros((), jnp.float32)
+
+    def train_batch(self, x: np.ndarray, y: np.ndarray, inner_steps: int = 1):
+        w, b = self.w, self.b
+        for _ in range(inner_steps):
+            w, b, loss = _step(w, b, x, y, self.lam, self.lr)
+        self.w, self.b = w, b
+        return float(loss)
+
+    def objective(self, x: np.ndarray, y: np.ndarray) -> float:
+        return float(_objective(self.w, self.b, x, y, self.lam))
+
+    def accuracy(self, x: np.ndarray, y: np.ndarray) -> float:
+        pred = np.sign(np.asarray(x @ self.w + self.b))
+        pred[pred == 0] = 1
+        return float((pred == y).mean())
+
+
+def relative_fdiff(f: float, f_star: float) -> float:
+    return (f - f_star) / abs(f_star)

@@ -1,0 +1,104 @@
+"""AdamW implemented from scratch (no optax), with mixed-precision support.
+
+When model params are stored in bf16 (``param_dtype='bfloat16'``), the
+optimizer keeps an f32 master copy in its state and the *gradient
+all-reduce happens in bf16* — halving gradient-sync collective bytes.
+This is the "gradient compression" lever used by the §Perf hillclimb;
+with f32 params it behaves like a standard AdamW.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # cosine decay horizon; 0 -> constant lr after warmup
+    decay_steps: int = 0
+    min_lr_frac: float = 0.1
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig = AdamWConfig()):
+        self.cfg = cfg
+
+    # -------------------------------------------------------------- init
+    def init(self, params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "mu": jax.tree_util.tree_map(f32, params),
+            "nu": jax.tree_util.tree_map(f32, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if any(p.dtype == jnp.bfloat16 for p in jax.tree_util.tree_leaves(params)):
+            state["master"] = jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params
+            )
+        return state
+
+    # ---------------------------------------------------------------- lr
+    def lr_at(self, step):
+        c = self.cfg
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1.0) / max(1, c.warmup_steps))
+        if c.decay_steps:
+            t = jnp.clip((step - c.warmup_steps) / max(1, c.decay_steps), 0.0, 1.0)
+            cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+            frac = c.min_lr_frac + (1.0 - c.min_lr_frac) * cos
+        else:
+            frac = 1.0
+        return c.lr * warm * frac
+
+    # ------------------------------------------------------------ update
+    def update(self, grads, state, params):
+        c = self.cfg
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+
+        # global-norm clip in f32
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(g32))
+        )
+        scale = jnp.where(
+            gnorm > c.grad_clip, c.grad_clip / jnp.maximum(gnorm, 1e-12), 1.0
+        )
+        g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+
+        mu = jax.tree_util.tree_map(
+            lambda m, g: c.b1 * m + (1 - c.b1) * g, state["mu"], g32
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: c.b2 * v + (1 - c.b2) * jnp.square(g), state["nu"], g32
+        )
+        mu_hat = jax.tree_util.tree_map(lambda m: m / (1 - c.b1**cf), mu)
+        nu_hat = jax.tree_util.tree_map(lambda v: v / (1 - c.b2**cf), nu)
+        lr = self.lr_at(state["count"])
+
+        masters = state.get("master", params)
+        new_master = jax.tree_util.tree_map(
+            lambda p, m, v: p.astype(jnp.float32)
+            - lr * (m / (jnp.sqrt(v) + c.eps) + c.weight_decay * p.astype(jnp.float32)),
+            masters,
+            mu_hat,
+            nu_hat,
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, nm: nm.astype(p.dtype), params, new_master
+        )
+        new_state = {"mu": mu, "nu": nu, "count": count}
+        if "master" in state:
+            new_state["master"] = new_master
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics

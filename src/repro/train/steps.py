@@ -1,0 +1,104 @@
+"""jit-able step functions: train (with optional microbatching), prefill,
+decode.  These are the functions the launcher jits with shardings and the
+dry-run lowers/compiles.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import ShardCtx
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train.compression import EFCompressor
+from repro.train.optimizer import AdamW
+
+
+def init_train_state(
+    cfg: ModelConfig, rng, optimizer: AdamW, compressor: Optional[EFCompressor] = None
+):
+    params = M.init_params(cfg, rng)
+    state = {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if compressor is not None:
+        state["ef_residual"] = compressor.init(params)
+    return state
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: AdamW,
+    ctx: Optional[ShardCtx] = None,
+    microbatches: int = 1,
+    compressor: Optional[EFCompressor] = None,
+):
+    def grad_fn(params, batch):
+        def lf(p):
+            return M.loss_fn(cfg, p, batch, ctx)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, mbatch):
+                loss_acc, grads_acc = carry
+                loss, metrics, grads = grad_fn(params, mbatch)
+                grads_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_acc, grads
+                )
+                return (loss_acc + loss, grads_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), mb
+            )
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = {}
+        else:
+            loss, metrics, grads = grad_fn(params, batch)
+
+        new_state = {"step": state["step"] + 1}
+        if compressor is not None:
+            # int8 error-feedback gradient compression: what crosses the
+            # wire at scale is the quantized codes (see train/compression)
+            compressed, new_state["ef_residual"] = compressor.compress(
+                grads, state["ef_residual"]
+            )
+            grads = compressor.decompress(compressed)
+
+        new_params, opt_state, opt_metrics = optimizer.update(grads, state["opt"], params)
+        new_state.update({"params": new_params, "opt": opt_state})
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: Optional[ShardCtx] = None):
+    def prefill_step(params, tokens, extras=None):
+        return M.prefill(cfg, params, tokens, extras, ctx)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: Optional[ShardCtx] = None):
+    def decode_step(params, cache, tokens, extras=None):
+        return M.decode_step(cfg, params, cache, tokens, extras, ctx)
+
+    return decode_step

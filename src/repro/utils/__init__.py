@@ -1,0 +1,6 @@
+from repro.utils.tree import (  # noqa: F401
+    map_with_path,
+    path_str,
+    tree_bytes,
+    tree_param_count,
+)

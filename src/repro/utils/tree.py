@@ -1,0 +1,42 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def path_str(path) -> str:
+    """Render a jax tree path as a '/'-joined string of keys/indices."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - defensive
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives (path_string, leaf)."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(path_str(p), x), tree)
+
+
+def tree_param_count(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(math.prod(x.shape) for x in leaves))
+
+
+def tree_bytes(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for x in leaves:
+        dt = np.dtype(x.dtype) if not hasattr(x.dtype, "itemsize") else x.dtype
+        total += math.prod(x.shape) * dt.itemsize
+    return int(total)

@@ -1,0 +1,12 @@
+import os
+import sys
+from pathlib import Path
+
+# make `import repro` work regardless of how pytest is invoked
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+# keep tests single-device and quiet (the dry-run process forces 512
+# devices separately; tests must see the real 1-CPU platform)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,70 @@
+"""Property tests for the random assignment tables (paper §4.1 + DESIGN §3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment import FeistelAssignment, TableAssignment
+
+CLASSES = [TableAssignment, FeistelAssignment]
+
+
+@pytest.mark.parametrize("cls", CLASSES)
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 4096), seed=st.integers(0, 2**31 - 1), epoch=st.integers(0, 50))
+def test_epoch_permutation_is_bijection(cls, n, seed, epoch):
+    a = cls(n, seed)
+    perm = a.epoch_permutation(epoch)
+    assert len(perm) == n
+    assert np.array_equal(np.sort(perm), np.arange(n))
+
+
+@pytest.mark.parametrize("cls", CLASSES)
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(32, 2048), seed=st.integers(0, 1000))
+def test_different_epochs_differ(cls, n, seed):
+    # n >= 32: P[two epochs draw the same permutation] <= 1/32! ~ 0
+    a = cls(n, seed)
+    perms = [a.epoch_permutation(e).copy() for e in range(4)]
+    assert any(
+        not np.array_equal(perms[i], perms[j])
+        for i in range(4)
+        for j in range(i + 1, 4)
+    )
+
+
+@pytest.mark.parametrize("cls", CLASSES)
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 1024),
+    seed=st.integers(0, 1000),
+    epoch=st.integers(0, 10),
+    data=st.data(),
+)
+def test_index_at_matches_permutation(cls, n, seed, epoch, data):
+    a = cls(n, seed)
+    slots = data.draw(
+        st.lists(st.integers(0, n - 1), min_size=1, max_size=32)
+    )
+    perm = a.epoch_permutation(epoch)
+    got = a.index_at(epoch, np.asarray(slots))
+    assert np.array_equal(got, perm[np.asarray(slots)])
+
+
+def test_feistel_is_o1_memory():
+    big = FeistelAssignment(10**9, seed=3)
+    assert big.nbytes < 1024  # vs 8 GB for the explicit table
+    # pointwise evaluation must not materialize the domain
+    idx = big.index_at(epoch=2, slots=np.array([0, 1, 10**9 - 1]))
+    assert ((0 <= idx) & (idx < 10**9)).all()
+
+
+def test_table_memory_matches_paper_accounting():
+    # ImageNet: 1,281,167 instances -> ~9.8 MB at 8 B/entry (paper §5.3.3)
+    t = TableAssignment(1281167)
+    assert abs(t.nbytes / 1e6 - 9.8) < 0.5
+
+
+def test_determinism_across_instances():
+    a1 = FeistelAssignment(777, seed=9)
+    a2 = FeistelAssignment(777, seed=9)
+    assert np.array_equal(a1.epoch_permutation(5), a2.epoch_permutation(5))

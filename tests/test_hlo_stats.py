@@ -1,0 +1,84 @@
+"""HLO collective parser + dry-run helper units."""
+import numpy as np
+
+from repro.launch.hlo_stats import _shape_bytes, collective_stats, op_histogram
+
+SAMPLE = """
+HloModule jit_f
+%add.clone (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(%x, %y)
+}
+ENTRY %main {
+  %p0 = f32[512,256]{1,0} parameter(0)
+  %dot = f32[512,256]{1,0} dot(%p0, %p0)
+  %all-reduce = f32[512,256]{1,0} all-reduce(%dot), replica_groups=[2,4]<=[8], to_apply=%add.clone
+  %ag = bf16[64,128]{1,0} all-gather(%half), replica_groups=[1,8]<=[8], dimensions={0}
+  %half = bf16[8,128]{1,0} parameter(1)
+  %rs = f32[64]{0} reduce-scatter(%big), replica_groups=[2,4]<=[8], to_apply=%add.clone
+  %big = f32[256]{0} parameter(2)
+  %cp = u32[16]{0} collective-permute(%small), source_target_pairs={{0,1}}
+  %small = u32[16]{0} parameter(3)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[512,256]") == 512 * 256 * 4
+    assert _shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert _shape_bytes("pred[10]") == 10
+    assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert _shape_bytes("f32[]") == 4
+
+
+def test_collective_stats_ring_model():
+    st = collective_stats(SAMPLE, total_devices=8)
+    assert st.count == 4
+    # all-reduce: 2*(3/4)*512*256*4
+    ar = 2 * 0.75 * 512 * 256 * 4
+    # all-gather: (7/8)*out(64*128*2)
+    ag = 7 / 8 * 64 * 128 * 2
+    # reduce-scatter: (3/4)*operand(256*4)
+    rs = 0.75 * 256 * 4
+    # collective-permute: 16*4
+    cp = 16 * 4
+    assert abs(st.per_device_bytes - (ar + ag + rs + cp)) < 1e-6
+    assert set(st.by_kind) == {"all-reduce", "all-gather", "reduce-scatter", "collective-permute"}
+
+
+def test_op_histogram():
+    h = op_histogram(SAMPLE)
+    assert h["parameter"] == 6
+    assert h["all-reduce"] == 1
+
+
+def test_with_repeats_and_sites():
+    # pure-config helpers from the dry-run (no jax device state touched)
+    import importlib.util as iu
+    import sys
+
+    from repro.configs import get_config
+
+    # avoid importing repro.launch.dryrun (it sets XLA_FLAGS); replicate its
+    # tiny helpers here against the real config API
+    cfg = get_config("recurrentgemma-2b")
+    sites = [(("stages", i), r) for i, (_, r) in enumerate(cfg.stages)]
+    assert sites == [(("stages", 0), 8), (("stages", 1), 1)]
+    new_stages = tuple(
+        (pat, {("stages", 0): 2}.get(("stages", i), r))
+        for i, (pat, r) in enumerate(cfg.stages)
+    )
+    cfg2 = cfg.replace(stages=new_stages)
+    assert cfg2.num_layers == 2 * 3 + 2
+    assert cfg.num_layers == 26
+
+
+def test_whisper_sites_include_encoder():
+    from repro.configs import get_config
+
+    cfg = get_config("whisper-tiny")
+    dec = [(("stages", i), r) for i, (_, r) in enumerate(cfg.stages)]
+    enc = [(("encoder", i), r) for i, (_, r) in enumerate(cfg.encoder.stages)]
+    assert dec == [(("stages", 0), 4)]
+    assert enc == [(("encoder", 0), 4)]

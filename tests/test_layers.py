@@ -1,0 +1,124 @@
+"""Layer-level equivalences: chunked vs exact forms, MoE impl parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers import attention as A
+from repro.layers import moe as moe_lib
+from repro.layers import rglru as R
+from repro.layers import xlstm as X
+from repro.models.config import ModelConfig, MoEConfig
+
+RNG = jax.random.PRNGKey(1)
+F32 = jnp.float32
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.fold_in(RNG, key), shape, F32)
+
+
+def test_local_attention_matches_masked_full():
+    b, s, h, kh, d, w = 2, 128, 4, 2, 32, 32
+    q, k, v = _rand(0, (b, s, h, d)), _rand(1, (b, s, kh, d)), _rand(2, (b, s, kh, d))
+    got = A.local_attention(q, k, v, window=w)
+    kk, vv = A._expand_kv(q, k, v)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = ((qpos - kpos >= 0) & (qpos - kpos < w))[None, None]
+    want = A.sdpa(q, kk, vv, mask=mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_attention_matches_full():
+    b, s, h, d = 1, 256, 2, 32
+    q, k, v = _rand(3, (b, s, h, d)), _rand(4, (b, s, h, d)), _rand(5, (b, s, h, d))
+    got = A.blocked_attention(q, k, v, block=64)
+    want = A.full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_full_last_row():
+    b, s, h, kh, d = 2, 64, 4, 2, 32
+    q = _rand(6, (b, s, h, d))
+    k = _rand(7, (b, s, kh, d))
+    v = _rand(8, (b, s, kh, d))
+    full = A.full_attention(q, k, v, causal=True)
+    got = A.decode_attention(q[:, -1:], k, v, jnp.full((b,), s - 1))
+    np.testing.assert_allclose(
+        np.asarray(got[:, 0]), np.asarray(full[:, -1]), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_decode_local_ring_buffer():
+    """Ring-cached local decode == full local attention's last row."""
+    b, s, h, kh, d, w = 1, 96, 2, 1, 16, 32
+    q = _rand(9, (b, s, h, d))
+    k = _rand(10, (b, s, kh, d))
+    v = _rand(11, (b, s, kh, d))
+    want = A.local_attention(q, k, v, window=w)[:, -1]
+    # build the ring: slot = pos % w for the last w positions
+    ring_k = jnp.zeros((b, w, kh, d), F32)
+    ring_v = jnp.zeros((b, w, kh, d), F32)
+    for pos in range(s - w, s):
+        ring_k = ring_k.at[:, pos % w].set(k[:, pos])
+        ring_v = ring_v.at[:, pos % w].set(v[:, pos])
+    got = A.decode_local_attention(q[:, -1:], ring_k, ring_v, jnp.full((b,), s - 1), w)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_mlstm_chunkwise_matches_sequential():
+    cfgd, heads = 32, 2
+    params = X.init_mlstm(RNG, cfgd, heads, 2.0, F32)
+    x = _rand(12, (2, 64, cfgd)) * 0.5
+    y_chunk, _ = X.mlstm_chunkwise(params, x, heads, chunk=16, dtype=F32)
+    y_seq, _ = X.mlstm_sequential_ref(params, x, heads, F32)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq), rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_step_matches_scan():
+    d, w = 16, 16
+    params = R.init_rglru(RNG, d, w, 4, F32, num_heads=2)
+    x = _rand(13, (2, 12, d))
+    y_full, (h_last, hist) = R.apply_rglru(params, x, F32)
+    # replay one token at a time
+    state = (jnp.zeros((2, w), F32), jnp.zeros((2, 3, w), F32))
+    ys = []
+    for t in range(12):
+        y, state = R.apply_rglru_step(params, x[:, t : t + 1], state, F32)
+        ys.append(y)
+    y_steps = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state[0]), np.asarray(h_last), rtol=2e-4, atol=2e-4)
+
+
+def _moe_cfg(impl):
+    return (
+        ModelConfig(
+            name="t", family="moe", d_model=32, num_heads=4, num_kv_heads=4,
+            d_ff=64, vocab_size=128, stages=((("moe",), 1),),
+            moe=MoEConfig(num_experts=4, experts_per_token=2, d_ff_expert=64,
+                          capacity_factor=8.0, impl=impl),
+        )
+    )
+
+
+def test_moe_dense_vs_ragged_parity():
+    """With capacity high enough to drop nothing, both impls agree."""
+    cfg_d, cfg_r = _moe_cfg("dense"), _moe_cfg("ragged")
+    params = moe_lib.init_moe(RNG, cfg_d, cfg_d.moe, F32)
+    x = _rand(14, (2, 16, 32))
+    y_d, aux_d = moe_lib.apply_moe(params, x, cfg_d, cfg_d.moe, F32)
+    y_r, aux_r = moe_lib.apply_moe(params, x, cfg_r, cfg_r.moe, F32)
+    np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_r), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux_d["moe_aux"]), float(aux_r["moe_aux"]), rtol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = _moe_cfg("dense")
+    tight = cfg.replace(moe=MoEConfig(4, 2, 64, capacity_factor=0.25))
+    params = moe_lib.init_moe(RNG, cfg, cfg.moe, F32)
+    x = _rand(15, (2, 16, 32))
+    y_loose, _ = moe_lib.apply_moe(params, x, cfg, cfg.moe, F32)
+    y_tight, _ = moe_lib.apply_moe(params, x, tight, tight.moe, F32)
+    assert not np.allclose(np.asarray(y_loose), np.asarray(y_tight))

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, asserting output shapes + finiteness (full configs are exercised only
+by the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model as M
+
+RNG = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.encoder is not None:
+        batch["encoder_frames"] = jnp.ones(
+            (B, cfg.encoder.num_frames, cfg.encoder.d_input), jnp.float32
+        )
+    if cfg.mrope_sections:
+        base = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+        batch["positions_3d"] = jnp.stack([base, base, base], 1)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, RNG)
+    batch = _batch(cfg)
+    loss, metrics = M.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch)[0])(params)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves)
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32)))) for g in leaves)
+    assert gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, RNG)
+    batch = _batch(cfg)
+    extras = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+    cache, logits = M.prefill(cfg, params, batch["tokens"], extras)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    c = M.init_decode_cache(cfg, B, S + 4)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    dec_extras = {}
+    for step in range(3):
+        if cfg.mrope_sections:
+            dec_extras["positions_3d"] = jnp.full((B, 3, 1), step, jnp.int32)
+        c, lg = M.decode_step(cfg, params, c, tok, dec_extras)
+        assert lg.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(lg, np.float32)).all()
+    assert int(c["pos"]) == 3
+
+
+@pytest.mark.parametrize("arch", ["minitron-8b", "recurrentgemma-2b", "xlstm-1.3b"])
+def test_decode_matches_prefill_logits(arch):
+    """Teacher-forced decode over a prompt reproduces prefill's last logits."""
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, RNG)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab_size)
+    _, logits_pre = M.prefill(cfg, params, tokens)
+    cache = M.init_decode_cache(cfg, 1, 16)
+    lg = None
+    for t in range(8):
+        cache, lg = M.decode_step(cfg, params, cache, tokens[:, t : t + 1])
+    np.testing.assert_allclose(
+        np.asarray(lg, np.float32), np.asarray(logits_pre, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_loss_chunking_equivalence():
+    cfg = get_config("minitron-8b", smoke=True)
+    params = M.init_params(cfg, RNG)
+    batch = _batch(cfg)
+    l0, _ = M.loss_fn(cfg, params, batch)
+    l1, _ = M.loss_fn(cfg.replace(loss_chunk=8), params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_blocked_attention_equivalence():
+    cfg = get_config("granite-3-8b", smoke=True)
+    params = M.init_params(cfg, RNG)
+    batch = _batch(cfg)
+    l0, _ = M.loss_fn(cfg, params, batch)
+    l1, _ = M.loss_fn(cfg.replace(attn_impl="blocked", attn_block=16), params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-4, atol=1e-5)
+
+
+def test_param_counts_match_published_sizes():
+    expected = {
+        "minitron-8b": (7.7e9, 8.5e9),
+        "stablelm-12b": (11.5e9, 12.7e9),
+        "dbrx-132b": (125e9, 136e9),
+        "qwen2-vl-72b": (70e9, 75e9),
+        "recurrentgemma-2b": (2.4e9, 2.9e9),
+        "qwen2-moe-a2.7b": (13e9, 15e9),
+        "granite-3-8b": (7.8e9, 8.8e9),
+        "phi4-mini-3.8b": (3.6e9, 4.6e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = M.param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params():
+    n_total = M.param_count(get_config("qwen2-moe-a2.7b"))
+    n_active = M.param_count(get_config("qwen2-moe-a2.7b"), active_only=True)
+    assert 2.2e9 <= n_active <= 3.2e9 < n_total

@@ -1,0 +1,89 @@
+"""Sharded sampler: disjointness, host-count invariance, resume, elastic."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampler import ShardedSampler
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    hosts=st.sampled_from([1, 2, 4, 8]),
+    lb=st.integers(1, 8),
+    n_mult=st.integers(2, 6),
+    seed=st.integers(0, 99),
+)
+def test_step_shards_are_disjoint_union(hosts, lb, n_mult, seed):
+    gb = hosts * lb
+    n = gb * n_mult
+    samplers = [ShardedSampler(n, gb, hosts, h, seed=seed) for h in range(hosts)]
+    batches = [s.next_batch() for s in samplers]
+    union = np.concatenate(batches)
+    assert len(union) == gb
+    assert len(set(union.tolist())) == gb
+    assert set(union.tolist()) == set(
+        samplers[0].global_batch_indices(0, 0).tolist()
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99), epoch=st.integers(0, 3), step=st.integers(0, 3))
+def test_global_stream_invariant_under_host_count(seed, epoch, step):
+    """The global batch at (epoch, step) is identical for any H — the
+    property that makes elastic scaling data-movement-free."""
+    n, gb = 256, 16
+    a = ShardedSampler(n, gb, 4, 0, seed=seed)
+    b = ShardedSampler(n, gb, 8, 0, seed=seed)
+    assert np.array_equal(
+        a.global_batch_indices(epoch, step), b.global_batch_indices(epoch, step)
+    )
+
+
+def test_epoch_within_coverage():
+    n, gb, hosts = 64, 16, 4
+    samplers = [ShardedSampler(n, gb, hosts, h, seed=7) for h in range(hosts)]
+    seen = []
+    for _ in range(n // gb):
+        for s in samplers:
+            seen.append(s.next_batch())
+    seen = np.concatenate(seen)
+    assert np.array_equal(np.sort(seen), np.arange(n))
+
+
+def test_checkpoint_restore_exact():
+    s = ShardedSampler(128, 16, 4, 2, seed=3)
+    for _ in range(5):
+        s.next_batch()
+    ck = s.checkpoint()
+    a = s.next_batch()
+    s2 = ShardedSampler(128, 16, 4, 2, seed=3)
+    s2.restore(ck)
+    assert np.array_equal(s2.next_batch(), a)
+
+
+def test_reshard_continues_stream():
+    s = ShardedSampler(128, 16, 4, 0, seed=1)
+    for _ in range(3):
+        s.next_batch()
+    re = [s.reshard(8, h) for h in range(8)]
+    merged = np.concatenate([r.next_batch() for r in re])
+    expect = s.global_batch_indices(s.state.epoch, s.state.step)
+    assert set(merged.tolist()) == set(expect.tolist())
+
+
+def test_steal_slots_preserves_coverage():
+    hosts, gb = 4, 40
+    samplers = [ShardedSampler(400, gb, hosts, h, seed=5) for h in range(hosts)]
+    for s in samplers:
+        s.steal_slots(slow_host=1, fast_host=0, count=4)
+    sizes = samplers[0].shard_sizes()
+    assert sizes == [14, 6, 10, 10]
+    batches = [s.next_batch() for s in samplers]
+    union = np.concatenate(batches)
+    assert len(set(union.tolist())) == gb
+
+
+def test_steal_rejects_non_adjacent():
+    s = ShardedSampler(400, 40, 4, 0)
+    with pytest.raises(ValueError):
+        s.steal_slots(slow_host=3, fast_host=0, count=2)

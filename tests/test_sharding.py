@@ -1,0 +1,133 @@
+"""Partition-spec rules validated against every FULL arch config on a fake
+16×16 (and 2×16×16) mesh — no devices needed, pure divisibility/shape
+logic.  Catches sharding-rule regressions without compiling."""
+import math
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.input_specs import cache_specs, state_specs
+from repro.sharding.specs import batch_pspecs, cache_pspecs, param_pspecs, state_pspecs
+from repro.utils.tree import map_with_path
+
+import jax
+
+
+def fake_mesh(shape, names):
+    return SimpleNamespace(
+        axis_names=names, devices=SimpleNamespace(shape=shape, size=math.prod(shape))
+    )
+
+
+SINGLE = fake_mesh((16, 16), ("data", "model"))
+MULTI = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+AXIS_SIZE = {"pod": 2, "data": 16, "model": 16}
+
+
+def _check_divisibility(shapes, pspecs, where):
+    problems = []
+
+    def check(path, leaf):
+        spec = spec_by_path[path]
+        for i, axes in enumerate(spec):
+            if axes is None:
+                continue
+            axes_t = axes if isinstance(axes, tuple) else (axes,)
+            total = math.prod(AXIS_SIZE[a] for a in axes_t)
+            if leaf.shape[i] % total != 0:
+                problems.append(f"{where}/{path}: dim{i}={leaf.shape[i]} % {total}")
+        return leaf
+
+    spec_by_path = {}
+    map_with_path(lambda p, s: spec_by_path.__setitem__(p, s) or s, pspecs)
+    map_with_path(check, shapes)
+    assert not problems, problems
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_and_state_specs_divisible(arch):
+    cfg = get_config(arch)
+    st = state_specs(cfg)
+    specs = state_pspecs(cfg, st, SINGLE, "fsdp_tp")
+    _check_divisibility(st, specs, arch)
+
+
+@pytest.mark.parametrize("arch", ["minitron-8b", "dbrx-132b", "qwen2-vl-72b"])
+def test_specs_on_multipod_mesh(arch):
+    cfg = get_config(arch)
+    st = state_specs(cfg)
+    specs = state_pspecs(cfg, st, MULTI, "fsdp_tp")
+    _check_divisibility(st, specs, arch)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_tp_sharding_hits_big_params(arch):
+    """The tensor axis must actually shard the transformer matmul weights
+    (attention/ffn/moe) — otherwise TP is silently a no-op."""
+    cfg = get_config(arch)
+    st = state_specs(cfg)
+    specs = param_pspecs(cfg, st["params"], SINGLE, "fsdp_tp")
+    found = []
+
+    def scan(path, spec):
+        if any(a == "model" for a in spec if a is not None and not isinstance(a, tuple)):
+            found.append(path)
+        return spec
+
+    map_with_path(scan, specs)
+    assert found, f"{arch}: no parameter is model-sharded"
+    # attention q heads TP-shard whenever the head count divides the axis
+    # (phi4's 24 and recurrentgemma's 10 heads don't divide 16 — those
+    # archs shard FFN/vocab over model and keep attention FSDP-only;
+    # see DESIGN.md §5)
+    has_attn = any(
+        k in ("attn", "moe", "local_attn") for pat, _ in cfg.stages for k in pat
+    )
+    if has_attn and cfg.num_heads % 16 == 0:
+        assert any("wq" in p for p in found), found[:5]
+
+
+def test_stack_dim_never_sharded():
+    cfg = get_config("granite-3-8b")
+    st = state_specs(cfg)
+    specs = param_pspecs(cfg, st["params"], SINGLE, "fsdp_tp")
+
+    def check(path, spec):
+        if path.startswith("stages/"):
+            assert spec[0] is None, f"{path}: layer-stack dim sharded: {spec}"
+        return spec
+
+    map_with_path(check, specs)
+
+
+def test_batch_specs_shard_batch_dim():
+    import jax.numpy as jnp
+
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+    }
+    specs = batch_pspecs(batch, SINGLE, ("data",))
+    assert specs["tokens"][0] == "data"
+    # indivisible batch stays replicated
+    odd = {"tokens": jax.ShapeDtypeStruct((3, 16), jnp.int32)}
+    assert batch_pspecs(odd, SINGLE, ("data",))["tokens"][0] is None
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "xlstm-1.3b", "recurrentgemma-2b"])
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    cs = cache_specs(cfg, 128, 32768)
+    specs = cache_pspecs(cs, SINGLE, ("data",))
+    _check_divisibility(cs, specs, arch)
+
+
+def test_kv_cache_seq_sharded_over_model():
+    cfg = get_config("granite-3-8b")
+    cs = cache_specs(cfg, 128, 32768)
+    specs = cache_pspecs(cs, SINGLE, ("data",))
+    k_spec = specs["stages"][0][0]["k"]
+    # (L, B, T, K, D): batch over data, capacity over model (flash-decode)
+    assert k_spec[1] == "data" and k_spec[2] == "model"

@@ -1,0 +1,86 @@
+"""Shuffler semantics: coverage, page cohesion, window limits, BMF blocks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.shuffler import BMFShuffler, LIRSShuffler, TFIPShuffler
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(10, 500),
+    bs=st.integers(1, 64),
+    epoch=st.integers(0, 5),
+    seed=st.integers(0, 99),
+)
+def test_lirs_covers_every_instance_exactly_once(n, bs, epoch, seed):
+    sh = LIRSShuffler(n, min(bs, n), seed=seed)
+    seen = np.concatenate(list(sh.epoch_batches(epoch)))
+    assert np.array_equal(np.sort(seen), np.arange(n))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 400), nb=st.integers(1, 20), seed=st.integers(0, 99))
+def test_bmf_blocks_fixed_order_shuffled(n, nb, seed):
+    nb = min(nb, n)
+    sh = BMFShuffler(n, nb, seed=seed)
+    e0 = [frozenset(b.tolist()) for b in sh.epoch_batches(0)]
+    e1 = [frozenset(b.tolist()) for b in sh.epoch_batches(1)]
+    # block CONTENTS never change (the paper's limited-randomness critique)
+    assert set(e0) == set(e1)
+    total = set().union(*e0)
+    assert total == set(range(n))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(10, 300),
+    q=st.integers(1, 50),
+    seed=st.integers(0, 99),
+)
+def test_tfip_window_bounds_displacement(n, q, seed):
+    """An element entering the queue at position i cannot be emitted before
+    the queue has buffered at least q items: out_pos(i) >= i - q + 1."""
+    sh = TFIPShuffler(n, batch_size=16, queue_size=q, seed=seed)
+    order = sh.epoch_order(0)
+    assert np.array_equal(np.sort(order), np.arange(n))
+    pos_of = np.empty(n, np.int64)
+    pos_of[order] = np.arange(n)
+    displacement = np.arange(n) - pos_of  # how much earlier it was emitted
+    assert (pos_of >= np.arange(n) - (q - 1)).all()
+
+
+def test_tfip_queue_one_is_identity():
+    sh = TFIPShuffler(50, 10, queue_size=1, seed=4)
+    assert np.array_equal(sh.epoch_order(0), np.arange(50))
+
+
+def test_lirs_reshuffles_each_epoch():
+    sh = LIRSShuffler(100, 10, seed=0)
+    b0 = np.concatenate(list(sh.epoch_batches(0)))
+    b1 = np.concatenate(list(sh.epoch_batches(1)))
+    assert not np.array_equal(b0, b1)
+
+
+def test_page_aware_keeps_pages_together():
+    groups = [np.arange(i * 3, i * 3 + 3) for i in range(20)]
+    sh = LIRSShuffler(60, 9, page_aware=True, page_groups=groups, seed=1)
+    batch_of = {}
+    for bi, b in enumerate(sh.epoch_batches(0)):
+        for i in b:
+            batch_of[int(i)] = bi
+    for g in groups:
+        assert len({batch_of[int(i)] for i in g}) == 1
+
+
+def test_io_plans_follow_paper_fig7():
+    n, total = 1000, 1e8
+    lirs = LIRSShuffler(n, 100).io_plan(total, is_sparse=False)
+    assert lirs.preprocess_seq_read_bytes == 0          # Fig 7c: none
+    assert lirs.epoch_rand_read_ios == n
+    lirs_sp = LIRSShuffler(n, 100).io_plan(total, is_sparse=True)
+    assert lirs_sp.preprocess_seq_read_bytes == total   # Fig 7b: scan only
+    bmf = BMFShuffler(n, 10).io_plan(total, is_sparse=False)
+    assert bmf.preprocess_rand_write_bytes == total     # Fig 7a: shuffle+write
+    assert bmf.epoch_seq_read_bytes == total
+    assert bmf.epoch_rand_read_ios == 0

@@ -1,0 +1,118 @@
+"""Record store + location generator + page cache + device models."""
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.location import LocationGenerator
+from repro.storage.devices import HDD, OPTANE, SSD
+from repro.storage.page_cache import LRUPageCache
+from repro.storage.record_store import PAGE, RecordStore, RecordWriter
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    recs=st.lists(st.binary(min_size=0, max_size=300), min_size=1, max_size=80)
+)
+def test_variable_roundtrip_and_location(tmp_path_factory, recs):
+    path = str(tmp_path_factory.mktemp("rs") / "v.rrec")
+    with RecordWriter(path) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    assert store.num_records == len(recs)
+    table = LocationGenerator().generate(store)
+    assert len(table.offsets) == len(recs)
+    for i in (0, len(recs) // 2, len(recs) - 1):
+        assert store.read(i) == recs[i]
+    # offsets strictly increasing, lengths correct
+    assert np.array_equal(table.lengths, np.array([len(r) for r in recs]))
+    assert (np.diff(table.offsets) > 0).all() or len(recs) == 1
+    store.close()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    size=st.integers(1, 256),
+    seed=st.integers(0, 100),
+)
+def test_fixed_roundtrip_no_preprocessing(tmp_path_factory, n, size, seed):
+    rng = np.random.default_rng(seed)
+    recs = [rng.bytes(size) for _ in range(n)]
+    path = str(tmp_path_factory.mktemp("rs") / "f.rrec")
+    with RecordWriter(path, record_size=size) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    # fixed format: indexed immediately, zero-scan (the paper's point)
+    assert store.indexed
+    table = LocationGenerator().generate(store)
+    assert table.scan_bytes == 0
+    for i in range(n):
+        assert store.read(i) == recs[i]
+    store.close()
+
+
+def test_read_range_matches_reads(tmp_path):
+    path = str(tmp_path / "r.rrec")
+    recs = [bytes([i]) * (i + 1) for i in range(20)]
+    with RecordWriter(path) as w:
+        for r in recs:
+            w.append(r)
+    s = RecordStore(path)
+    LocationGenerator().generate(s)
+    assert s.read_range(3, 9) == recs[3:12]
+    s.close()
+
+
+def test_iostats_random_vs_sequential(tmp_path):
+    path = str(tmp_path / "io.rrec")
+    with RecordWriter(path, record_size=64) as w:
+        for i in range(100):
+            w.append(bytes([i % 256]) * 64)
+    s = RecordStore(path)
+    s.stats.reset()
+    s.read_range(0, 100)
+    assert s.stats.random_reads == 1  # one seek
+    s.stats.reset()
+    for i in [5, 50, 7, 99]:
+        s.read(i)
+    assert s.stats.random_reads == 4
+    s.close()
+
+
+def test_page_groups_cover_everything(tmp_path):
+    path = str(tmp_path / "pg.rrec")
+    with RecordWriter(path, record_size=300) as w:
+        for i in range(64):
+            w.append(b"x" * 300)
+    s = RecordStore(path)
+    groups = s.page_groups()
+    allidx = np.concatenate(groups)
+    assert np.array_equal(np.sort(allidx), np.arange(64))
+    # instances within a group share the starting page
+    offs = s.offsets()
+    for g in groups:
+        assert len(set((offs[g] // PAGE).tolist())) == 1
+    s.close()
+
+
+def test_lru_page_cache():
+    c = LRUPageCache(2)
+    assert not c.access(1) and not c.access(2)
+    assert c.access(1)           # hit
+    assert not c.access(3)       # evicts 2
+    assert not c.access(2)       # miss again
+    assert c.transfers == 4
+
+
+def test_device_models_match_table2_ordering():
+    nbytes = 100 * PAGE
+    # sequential: HDD 67x slower than its own random claim etc.
+    assert HDD.t_rand_read(100) > HDD.t_seq_read(nbytes) * 10
+    assert OPTANE.t_rand_read(100) < HDD.t_rand_read(100) / 500
+    assert SSD.t_rand_read(100) < HDD.t_rand_read(100) / 100
+    # Optane random ~ its sequential (the paper's NVM opportunity)
+    assert OPTANE.t_rand_read(100, nbytes) < 2.5 * OPTANE.t_seq_read(nbytes)
