@@ -1,0 +1,106 @@
+"""batch_read — throughput of the coalesced multi-queue batch engine.
+
+Compares, at several batch sizes, records/s for:
+  * ``naive``       — the seed per-record ``read_batch`` loop (1 syscall +
+                      1 heap allocation per record)
+  * ``coalesced``   — offset-sorted gap-merged range reads into a dense
+                      preallocated buffer (``read_batch_into``, 1 worker)
+  * ``coalesced@N`` — the same plan fanned across N reader threads
+                      (host-side I/O queue depth)
+
+Emits JSON to benchmarks/results/batch_read.json (the BENCH trajectory
+contract) and harness CSV rows with the speedup over naive as *derived*.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import cached
+from repro.storage.record_store import PAGE, RecordStore, RecordWriter
+
+N_RECORDS = 65_536
+RECORD_SIZE = 256
+BATCHES = [256, 1024, 4096]
+WORKER_COUNTS = [4, 8]
+GAP = 4 * PAGE
+REPS = 5
+
+
+def _best_records_per_s(fn, batch: int, reps: int = REPS) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return batch / best
+
+
+def run(force: bool = False):
+    def compute():
+        tmp = tempfile.mkdtemp()
+        path = f"{tmp}/batch.rrec"
+        rng = np.random.default_rng(0)
+        payload = rng.integers(0, 256, size=RECORD_SIZE, dtype=np.uint8)
+        with RecordWriter(path, record_size=RECORD_SIZE) as w:
+            for _ in range(N_RECORDS):
+                w.append(payload.tobytes())
+        store = RecordStore(path)
+        out = {
+            "num_records": N_RECORDS,
+            "record_size": RECORD_SIZE,
+            "gap_bytes": GAP,
+            "batches": {},
+        }
+        for b in BATCHES:
+            idx = rng.permutation(N_RECORDS)[:b]
+            dest = np.empty((b, RECORD_SIZE), np.uint8)
+            row = {
+                "naive": _best_records_per_s(lambda: store.read_batch(idx), b),
+                "coalesced": _best_records_per_s(
+                    lambda: store.read_batch_into(idx, out=dest, gap_bytes=GAP),
+                    b,
+                ),
+            }
+            for wk in WORKER_COUNTS:
+                row[f"coalesced@{wk}"] = _best_records_per_s(
+                    lambda: store.read_batch_into(
+                        idx, out=dest, gap_bytes=GAP, workers=wk
+                    ),
+                    b,
+                )
+            store.stats.reset()
+            store.read_batch_into(idx, gap_bytes=GAP)
+            row["records_per_io"] = store.stats.records_per_io
+            out["batches"][str(b)] = row
+        store.close()
+        return out
+
+    return cached("batch_read", compute, force)
+
+
+def rows():
+    res = run()
+    out = []
+    for b, row in res["batches"].items():
+        naive = row["naive"]
+        for variant, rps in row.items():
+            if variant == "records_per_io":
+                continue
+            out.append(
+                (
+                    f"batch_read/b{b}/{variant}",
+                    1e6 / rps,  # us per record
+                    f"{rps:,.0f} rec/s x{rps / naive:.1f} "
+                    f"coalesce={row['records_per_io']:.1f}",
+                )
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run(force=True)
+    for r in rows():
+        print(",".join(map(str, r)))

@@ -16,7 +16,7 @@ from benchmarks.common import Timer, cached
 from repro.core.pipeline import InputPipeline
 from repro.core.shuffler import BMFShuffler, LIRSShuffler, TFIPShuffler
 from repro.data.synthetic import decode_token_batch, make_token_dataset
-from repro.storage.record_store import RecordStore
+from repro.storage.record_store import BatchBufferRing, RecordStore
 
 N, SEQ, VOCAB, BATCH = 4096, 128, 1024, 64
 
@@ -37,6 +37,13 @@ def run(force: bool = False):
             for i in perm:
                 store.read(int(i))
         out["rand_read_us_per_record"] = t.seconds / N * 1e6
+
+        # coalesced multi-queue batch path (the PR 1 engine)
+        batches = perm.reshape(-1, BATCH)
+        with Timer() as t:
+            for bidx in batches:
+                store.read_batch_into(bidx, workers=4)
+        out["coalesced_read_us_per_record"] = t.seconds / N * 1e6
 
         # shuffler index-generation overhead (the LIRS "shuffle" itself)
         for name, sh in (
@@ -68,6 +75,31 @@ def run(force: bool = False):
             "t_unhidden_load_s": s.t_wait,
             "overlap_fraction": s.t_overlap / max(s.t_load, 1e-9),
         }
+
+        # multi-producer + coalesced reads + buffer-ring reuse
+        ring = BatchBufferRing(BATCH, store.record_size, depth=6)
+        def fetch_coalesced(idx):
+            buf = ring.acquire(len(idx))
+            return decode_token_batch(
+                store.read_batch_into(idx, out=buf, workers=2), SEQ
+            )
+        pipe2 = InputPipeline(
+            lambda e: LIRSShuffler(N, BATCH, seed=0).epoch_batches(e),
+            fetch_coalesced,
+            prefetch=4,
+            num_producers=2,
+            recycle_fn=lambda d: ring.recycle(d["tokens"]),
+        )
+        for batch in pipe2.epoch(0):
+            time.sleep(0.002)
+        s2 = pipe2.stats
+        out["pipeline_mq"] = {
+            "t_load_s": s2.t_load,
+            "t_comp_s": s2.t_comp,
+            "t_unhidden_load_s": s2.t_wait,
+            "effective_epoch_s": s2.effective_epoch_time(),
+            "ring_misses": ring.misses,
+        }
         store.close()
         return out
 
@@ -77,8 +109,13 @@ def run(force: bool = False):
 def rows():
     res = run()
     out = []
-    for k in ("seq_read_us_per_record", "rand_read_us_per_record"):
-        out.append((f"pipeline/{k}", res[k], ""))
+    for k in (
+        "seq_read_us_per_record",
+        "rand_read_us_per_record",
+        "coalesced_read_us_per_record",
+    ):
+        if k in res:
+            out.append((f"pipeline/{k}", res[k], ""))
     for k, v in res.items():
         if k.startswith("shuffle_us_per_record/"):
             out.append((f"pipeline/{k}", v, ""))
@@ -91,6 +128,16 @@ def rows():
             f"hidden={100*p['overlap_fraction']:.1f}%",
         )
     )
+    if "pipeline_mq" in res:
+        q = res["pipeline_mq"]
+        out.append(
+            (
+                "pipeline/multi_queue",
+                q["t_unhidden_load_s"] * 1e6,
+                f"load={q['t_load_s']:.3f}s eff={q['effective_epoch_s']:.3f}s "
+                f"ring_misses={q['ring_misses']}",
+            )
+        )
     return out
 
 

@@ -17,6 +17,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        batch_read,
         dnn_convergence,
         memory_overhead,
         page_aware,
@@ -35,6 +36,7 @@ def main() -> None:
         "page_aware": page_aware,               # Fig 11
         "memory_overhead": memory_overhead,     # Table 5
         "pipeline_throughput": pipeline_throughput,
+        "batch_read": batch_read,               # coalesced multi-queue engine
         "roofline": roofline,                   # §Roofline (from dry-run)
     }
     if args.only:

@@ -49,7 +49,8 @@ def _load(tmpdir: str, name, n, dim, sparse, nnz, seed=0):
         LocationGenerator().generate(store)
         xs, ys = decode_sparse_batch(store.read_batch(range(n)), dim)
     else:
-        xs, ys = decode_dense_batch(store.read_batch(range(n)), dim)
+        # coalesced dense read: one range pread + zero-copy f32 reinterpret
+        xs, ys = decode_dense_batch(store.read_batch_into(range(n)), dim)
     store.close()
     return xs, ys
 

@@ -24,10 +24,15 @@ def main():
     cfg = get_config("minitron-8b", smoke=True).replace(vocab_size=256)
     trainer = Trainer(
         cfg,
-        fetch_fn=lambda idx: decode_token_batch(store.read_batch(idx), 64),
+        # coalesced multi-queue batch reads: offset-sorted gap-merged range
+        # preads fanned over 4 reader threads, decoded zero-copy
+        fetch_fn=lambda idx: decode_token_batch(
+            store.read_batch_into(idx, workers=4), 64
+        ),
         shuffler=make_shuffler("lirs", store.num_records, batch_size=16, seed=0),
         loop_cfg=TrainLoopConfig(epochs=3, ckpt_dir=f"{workdir}/ckpt", seed=0),
         opt_cfg=AdamWConfig(lr=3e-3, warmup_steps=5),
+        num_producers=2,
     )
     summary = trainer.train()
     first, last = trainer.history[0]["loss"], trainer.history[-1]["loss"]

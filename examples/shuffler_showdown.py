@@ -30,6 +30,7 @@ def main():
     results = {}
     extra_kw = {
         "tfip": {"queue_size": 32},
+        "lirs": {"avg_instance_bytes": meta.avg_record_bytes},
         "lirs_page": {"page_groups": store.page_groups()},
     }
     for kind in ("lirs", "lirs_page", "bmf", "tfip"):
@@ -43,14 +44,23 @@ def main():
         )
         summary = t.train()
         losses = [h["loss"] for h in t.history]
-        plan = sh.io_plan(meta.total_bytes, is_sparse=False)
+        # price the epoch through the coalesced multi-queue engine for the
+        # LIRS variants (gap-merged range reads at queue depth 4)
+        plan_kw = (
+            {"coalesce_gap": 4096.0, "queue_depth": 4.0}
+            if kind.startswith("lirs")
+            else {}
+        )
+        plan = sh.io_plan(meta.total_bytes, is_sparse=False, **plan_kw)
         costs = {}
         for dev_name, dev in STORAGE_MODELS.items():
             t_pre = dev.t_seq_read(plan.preprocess_seq_read_bytes) + dev.t_rand_write(
                 plan.preprocess_rand_write_ios, plan.preprocess_rand_write_bytes
             )
             t_epoch = dev.t_seq_read(plan.epoch_seq_read_bytes) + dev.t_rand_read(
-                plan.epoch_rand_read_ios, plan.epoch_rand_read_bytes
+                plan.epoch_rand_read_ios,
+                plan.epoch_rand_read_bytes,
+                queue_depth=plan.queue_depth,
             )
             costs[dev_name] = {"t_preprocess_s": t_pre, "t_load_per_epoch_s": t_epoch}
         results[kind] = {"first": losses[0], "last": losses[-1], "io": costs}

@@ -2,13 +2,25 @@
 
     T_total = T_pre + (T_load + T_comp − T_overlap) · #Epochs      (paper Eq. 1)
 
-A background thread reads + decodes batches (T_load) while the device
+Background threads read + decode batches (T_load) while the device
 computes (T_comp); the overlap is measured, not assumed, so the DNN-side
 claim of §4.3 ("loading hides behind compute") is empirically checkable.
 
+Multi-producer mode (``num_producers > 1``) drives the coalesced record
+store from several GIL-releasing reader threads at once — host-side I/O
+queue depth — while the consumer reassembles batches **in order** through
+a bounded sequence window, so batch order (and therefore training
+reproducibility) is identical to single-producer mode.  Accounting stays
+correct under concurrency: ``t_load`` aggregates producer busy time across
+threads (it can exceed wall clock, exactly like aggregate device queue
+time), while ``effective_epoch_time`` is measured purely on the consumer
+side and remains wall-accurate.
+
 The pipeline is storage-agnostic: LIRS shufflers drive random reads into a
 RecordStore, BMF/TFIP drive sequential reads, and the same accounting
-applies to both.
+applies to both.  ``recycle_fn`` (e.g. ``BatchBufferRing.recycle``) is
+called with each *fetched* item once the consumer has moved past it,
+enabling zero-allocation steady state with reused destination buffers.
 """
 from __future__ import annotations
 
@@ -23,11 +35,20 @@ import numpy as np
 
 @dataclass
 class PipelineStats:
-    t_load: float = 0.0      # wall time spent producing batches (read+decode)
+    t_load: float = 0.0      # producer busy time (read+decode), summed over threads
     t_comp: float = 0.0      # wall time the consumer spent computing
     t_wait: float = 0.0      # consumer time blocked on the queue (= unhidden load)
     t_preprocess: float = 0.0
     batches: int = 0
+    producers: int = 1       # producer threads of the last epoch run
+    _lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
+
+    def add_load(self, dt: float):
+        """Thread-safe t_load accumulation (called from producer threads)."""
+        with self._lock:
+            self.t_load += dt
 
     @property
     def t_overlap(self) -> float:
@@ -35,7 +56,10 @@ class PipelineStats:
         return max(0.0, self.t_load - self.t_wait)
 
     def effective_epoch_time(self) -> float:
-        """T_load + T_comp − T_overlap (Eq. 1) == T_comp + unhidden load."""
+        """T_load + T_comp − T_overlap (Eq. 1) == T_comp + unhidden load.
+
+        Measured entirely on the consumer side, so it stays wall-accurate
+        for any number of producer threads."""
         return self.t_comp + self.t_wait
 
 
@@ -46,47 +70,176 @@ class InputPipeline:
         fetch_fn: Callable[[np.ndarray], Any],
         prefetch: int = 2,
         put_fn: Optional[Callable[[Any], Any]] = None,
+        num_producers: int = 1,
+        recycle_fn: Optional[Callable[[Any], Any]] = None,
     ):
         """batch_iter_fn(epoch) yields index arrays; fetch_fn reads+decodes
         them (host); put_fn optionally ships to device (e.g. sharded
-        jax.device_put)."""
+        jax.device_put); recycle_fn gets the raw fetched item back once the
+        consumer has advanced past it (buffer-ring reuse)."""
         self.batch_iter_fn = batch_iter_fn
         self.fetch_fn = fetch_fn
         self.put_fn = put_fn
         self.prefetch = prefetch
+        self.num_producers = max(1, num_producers)
+        self.recycle_fn = recycle_fn
         self.stats = PipelineStats()
 
+    # ------------------------------------------------------------ consume
+    def _emit(self, raw: Any) -> Iterator[Any]:
+        item = self.put_fn(raw) if self.put_fn is not None else raw
+        self.stats.batches += 1
+        tc = time.perf_counter()
+        yield item
+        self.stats.t_comp += time.perf_counter() - tc
+        if self.recycle_fn is not None:
+            self.recycle_fn(raw)
+
     def epoch(self, epoch: int) -> Iterator[Any]:
+        self.stats.producers = self.num_producers
+        if self.num_producers == 1:
+            yield from self._epoch_single(epoch)
+        else:
+            yield from self._epoch_multi(epoch)
+
+    # --------------------------------------------------- single producer
+    def _epoch_single(self, epoch: int) -> Iterator[Any]:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         DONE = object()
         err: list = []
+        stop = threading.Event()
 
         def producer():
             try:
                 for idx in self.batch_iter_fn(epoch):
                     t0 = time.perf_counter()
                     data = self.fetch_fn(idx)
-                    self.stats.t_load += time.perf_counter() - t0
-                    q.put(data)
+                    self.stats.add_load(time.perf_counter() - t0)
+                    if not _put_until(q, data, stop):
+                        return
             except Exception as e:  # pragma: no cover - surfaced to consumer
                 err.append(e)
             finally:
-                q.put(DONE)
+                _put_until(q, DONE, stop)
 
         th = threading.Thread(target=producer, daemon=True)
         th.start()
-        while True:
-            t0 = time.perf_counter()
-            item = q.get()
-            self.stats.t_wait += time.perf_counter() - t0
-            if item is DONE:
-                break
-            if self.put_fn is not None:
-                item = self.put_fn(item)
-            self.stats.batches += 1
-            tc = time.perf_counter()
-            yield item
-            self.stats.t_comp += time.perf_counter() - tc
-        th.join()
+        try:
+            while True:
+                t0 = time.perf_counter()
+                item = q.get()
+                self.stats.t_wait += time.perf_counter() - t0
+                if item is DONE:
+                    break
+                yield from self._emit(item)
+        finally:
+            # join even when the consumer abandons the epoch: the producer
+            # must quiesce (it exits within one fetch + the 0.1 s put
+            # poll once `stop` is set) before the store can be closed
+            stop.set()
+            th.join()
         if err:
             raise err[0]
+
+    # ---------------------------------------------------- multi producer
+    def _epoch_multi(self, epoch: int) -> Iterator[Any]:
+        """N producers pull (seq, indices) work items from one shared
+        iterator and push (seq, batch) results; the consumer reassembles
+        the original order.  A credit window of ``prefetch + producers``
+        outstanding sequences bounds memory: a producer may not *start*
+        fetching a sequence further ahead than that, so the reorder buffer
+        and queue are both bounded even under pathological fetch skew."""
+        n_prod = self.num_producers
+        window = self.prefetch + n_prod
+        q: "queue.Queue" = queue.Queue(maxsize=window)
+        DONE = object()
+        err: list = []
+        stop = threading.Event()
+        src = enumerate(self.batch_iter_fn(epoch))
+        src_lock = threading.Lock()
+        credit = threading.Condition()
+        emitted = [0]  # == next sequence the consumer will yield
+
+        def producer():
+            try:
+                while not (stop.is_set() or err):
+                    with src_lock:
+                        try:
+                            seq, idx = next(src)
+                        except StopIteration:
+                            break
+                    with credit:
+                        while (
+                            seq - emitted[0] >= window
+                            and not stop.is_set()
+                            and not err
+                        ):
+                            credit.wait(0.1)
+                    if stop.is_set() or err:
+                        break
+                    t0 = time.perf_counter()
+                    data = self.fetch_fn(idx)
+                    self.stats.add_load(time.perf_counter() - t0)
+                    if not _put_until(q, (seq, data), stop):
+                        return
+            except Exception as e:
+                err.append(e)
+            finally:
+                _put_until(q, DONE, stop)
+
+        threads = [
+            threading.Thread(target=producer, daemon=True) for _ in range(n_prod)
+        ]
+        for th in threads:
+            th.start()
+        pending: dict = {}
+        done = 0
+        try:
+            while done < n_prod:
+                if emitted[0] in pending:
+                    raw = pending.pop(emitted[0])
+                else:
+                    t0 = time.perf_counter()
+                    got = q.get()
+                    self.stats.t_wait += time.perf_counter() - t0
+                    if got is DONE:
+                        done += 1
+                        continue
+                    seq, data = got
+                    if seq != emitted[0]:
+                        pending[seq] = data
+                        continue
+                    raw = data
+                yield from self._emit(raw)
+                with credit:
+                    emitted[0] += 1
+                    credit.notify_all()
+            # producers finished; drain whatever reassembly still holds
+            while emitted[0] in pending:
+                raw = pending.pop(emitted[0])
+                yield from self._emit(raw)
+                with credit:
+                    emitted[0] += 1
+                    credit.notify_all()
+        finally:
+            # as in the single-producer path: wake + join all producers
+            # before returning control, so no reader thread can touch the
+            # store after the epoch is over (even on early abandon)
+            stop.set()
+            with credit:
+                credit.notify_all()
+            for th in threads:
+                th.join()
+        if err:
+            raise err[0]
+
+
+def _put_until(q: "queue.Queue", item: Any, stop: threading.Event) -> bool:
+    """Bounded put that aborts when the consumer abandoned the epoch."""
+    while True:
+        try:
+            q.put(item, timeout=0.1)
+            return True
+        except queue.Full:
+            if stop.is_set():
+                return False

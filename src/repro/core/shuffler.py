@@ -29,7 +29,14 @@ from repro.storage.record_store import PAGE
 
 @dataclasses.dataclass
 class IOPlan:
-    """Per-epoch storage access pattern (for the device cost models)."""
+    """Per-epoch storage access pattern (for the device cost models).
+
+    ``epoch_rand_read_ios`` already reflects coalescing: it counts *issued*
+    range reads, not records.  ``coalescing_factor`` (records per random
+    I/O) and ``queue_depth`` (concurrent reader threads) record how the
+    batch engine was configured so the device models can price the epoch
+    at the right effective IOPS.
+    """
 
     preprocess_seq_read_bytes: float = 0.0
     preprocess_rand_write_ios: float = 0.0
@@ -37,6 +44,30 @@ class IOPlan:
     epoch_seq_read_bytes: float = 0.0
     epoch_rand_read_ios: float = 0.0
     epoch_rand_read_bytes: float = 0.0
+    coalescing_factor: float = 1.0
+    queue_depth: float = 1.0
+
+
+def expected_coalescing_factor(
+    num_items: int, batch_size: int, gap_records: float
+) -> float:
+    """Expected records per coalesced I/O for a uniform random batch.
+
+    Sorting a batch of B uniform draws from N records makes neighbour
+    spacing ~geometric with p = B/N; two sorted neighbours merge when
+    their spacing is at most ``1 + gap_records``, which happens with
+    probability 1 − (1−p)^(1+g).  Hence
+
+        E[#extents] ≈ 1 + (B−1)·(1−p)^(1+g),
+        factor      = B / E[#extents]  ≥ 1.
+    """
+    b = min(batch_size, num_items)
+    if b <= 1 or num_items <= 1:
+        return 1.0
+    p = b / num_items
+    survive = (1.0 - p) ** (1.0 + max(0.0, gap_records))
+    extents = 1.0 + (b - 1) * survive
+    return b / extents
 
 
 class LIRSShuffler:
@@ -88,7 +119,18 @@ class LIRSShuffler:
         if batch:
             yield np.concatenate(batch)
 
-    def io_plan(self, total_bytes: float, is_sparse: bool) -> IOPlan:
+    def io_plan(
+        self,
+        total_bytes: float,
+        is_sparse: bool,
+        coalesce_gap: float = 0.0,
+        queue_depth: float = 1.0,
+    ) -> IOPlan:
+        """Price an epoch.  ``coalesce_gap`` (bytes) and ``queue_depth``
+        describe the batch-materialization engine: gap-merging shrinks the
+        number of issued random I/Os by the expected coalescing factor,
+        and queue depth is forwarded for the device models' concurrency
+        scaling (``StorageModel.t_rand_read``)."""
         plan = IOPlan()
         if is_sparse:  # offset-table scan (Fig 7b)
             plan.preprocess_seq_read_bytes = total_bytes
@@ -96,6 +138,14 @@ class LIRSShuffler:
             n_ios = len(self.page_groups)
         else:
             n_ios = self.num_items
+        if coalesce_gap > 0 and self.avg_instance_bytes > 0 and not self.page_aware:
+            plan.coalescing_factor = expected_coalescing_factor(
+                self.num_items,
+                self.batch_size,
+                coalesce_gap / self.avg_instance_bytes,
+            )
+            n_ios = n_ios / plan.coalescing_factor
+        plan.queue_depth = max(1.0, queue_depth)
         plan.epoch_rand_read_ios = n_ios
         plan.epoch_rand_read_bytes = total_bytes
         return plan

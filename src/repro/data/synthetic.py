@@ -134,6 +134,12 @@ def decode_sparse(raw: bytes, dim: int) -> Tuple[np.float32, np.ndarray]:
 
 
 def decode_dense_batch(raws, dim: int):
+    if isinstance(raws, np.ndarray):
+        # dense (B, record_size) uint8 matrix from read_batch_into:
+        # reinterpret in place, no per-record Python.  NOTE: xs aliases
+        # `raws` — pass a fresh (non-recycled) buffer or copy before reuse.
+        m = np.ascontiguousarray(raws).view(np.float32)
+        return m[:, 1 : 1 + dim], m[:, 0].copy()
     ys = np.empty(len(raws), np.float32)
     xs = np.empty((len(raws), dim), np.float32)
     for i, r in enumerate(raws):
@@ -154,5 +160,10 @@ def decode_tokens(raw: bytes, seq_len: int) -> np.ndarray:
 
 
 def decode_token_batch(raws, seq_len: int):
-    toks = np.stack([decode_tokens(r, seq_len) for r in raws])
+    if isinstance(raws, np.ndarray):
+        # zero-copy reinterpret of the coalesced read's dense buffer;
+        # truncate to seq_len+1 like the per-record path does
+        toks = np.ascontiguousarray(raws).view(np.int32)[:, : seq_len + 1]
+    else:
+        toks = np.stack([decode_tokens(r, seq_len) for r in raws])
     return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,13 @@
+"""Small JAX-version compatibility shims for the Pallas TPU API.
+
+``pltpu.CompilerParams`` was called ``TPUCompilerParams`` in older JAX
+releases (e.g. 0.4.x); resolve whichever name this installation provides
+so the kernels run unmodified across versions.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -104,7 +106,7 @@ def flash_decode(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

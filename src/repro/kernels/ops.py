@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.batch_gather import batch_gather as _batch_gather
+from repro.kernels.batch_gather import batch_gather_dma as _batch_gather_dma
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.rglru_scan import rglru_scan as _rglru_scan
 
@@ -19,6 +20,17 @@ def batch_gather(table, indices, *, block_d: int = 512, rows_per_block: int = 1,
                  interpret: bool | None = None):
     return _batch_gather(
         table, indices, block_d=block_d, rows_per_block=rows_per_block,
+        interpret=INTERPRET if interpret is None else interpret,
+    )
+
+
+def batch_gather_dma(table, indices, *, block_d: int = 512,
+                     rows_per_block: int = 1, rows_per_step: int = 8,
+                     interpret: bool | None = None):
+    """Multi-row double-buffered gather (same semantics as batch_gather)."""
+    return _batch_gather_dma(
+        table, indices, block_d=block_d, rows_per_block=rows_per_block,
+        rows_per_step=rows_per_step,
         interpret=INTERPRET if interpret is None else interpret,
     )
 

@@ -42,6 +42,10 @@ def build_argparser():
     ap.add_argument("--data", default="", help="existing RecordStore path")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fail-at-step", type=int, default=-1)
+    ap.add_argument("--io-workers", type=int, default=4,
+                    help="reader threads for coalesced batch reads (queue depth)")
+    ap.add_argument("--io-producers", type=int, default=1,
+                    help="pipeline producer threads (ordered reassembly)")
     return ap
 
 
@@ -64,8 +68,17 @@ def main(argv=None):
         store = RecordStore(meta.path)
         seq = args.seq_len
 
-    def fetch(idx):
-        return decode_token_batch(store.read_batch(idx), seq)
+    if store.variable:
+        def fetch(idx):
+            return decode_token_batch(
+                store.read_batch_coalesced(idx, workers=args.io_workers), seq
+            )
+    else:
+        # coalesced multi-queue hot path: dense buffer, zero-copy decode
+        def fetch(idx):
+            return decode_token_batch(
+                store.read_batch_into(idx, workers=args.io_workers), seq
+            )
 
     shuffler = make_shuffler(
         args.shuffler, store.num_records, args.batch, seed=args.seed,
@@ -80,6 +93,7 @@ def main(argv=None):
             fail_at_step=args.fail_at_step, seed=args.seed,
         ),
         opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=10),
+        num_producers=args.io_producers,
     )
     if args.resume and trainer.try_resume():
         print(f"resumed at step {trainer.global_step}")

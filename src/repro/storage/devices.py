@@ -20,6 +20,10 @@ class StorageModel:
     seq_write_iops: float
     rand_read_iops: float
     rand_write_iops: float
+    # I/O queue depth beyond which more in-flight requests stop helping.
+    # Table 2 rates are single-stream; NVM parallelism scales them until
+    # the device's internal channels saturate.  HDDs seek serially.
+    max_queue_depth: float = 1.0
 
     # ------------------------------------------------------------- times
     def t_seq_read(self, nbytes: float) -> float:
@@ -28,18 +32,25 @@ class StorageModel:
     def t_seq_write(self, nbytes: float) -> float:
         return self._pages(nbytes) / self.seq_write_iops
 
-    def t_rand_read(self, n_ios: float, nbytes: float = 0.0) -> float:
+    def t_rand_read(
+        self, n_ios: float, nbytes: float = 0.0, queue_depth: float = 1.0
+    ) -> float:
         """n_ios random operations moving nbytes total.  Each random op
         pays the random-IOPS cost; volume beyond one page per op streams
-        at sequential speed."""
+        at sequential speed.  ``queue_depth`` > 1 overlaps the per-op
+        latency across in-flight requests, up to ``max_queue_depth``."""
         pages = self._pages(nbytes)
         extra = max(0.0, pages - n_ios)
-        return n_ios / self.rand_read_iops + extra / self.seq_read_iops
+        qd = max(1.0, min(queue_depth, self.max_queue_depth))
+        return n_ios / (self.rand_read_iops * qd) + extra / self.seq_read_iops
 
-    def t_rand_write(self, n_ios: float, nbytes: float = 0.0) -> float:
+    def t_rand_write(
+        self, n_ios: float, nbytes: float = 0.0, queue_depth: float = 1.0
+    ) -> float:
         pages = self._pages(nbytes)
         extra = max(0.0, pages - n_ios)
-        return n_ios / self.rand_write_iops + extra / self.seq_write_iops
+        qd = max(1.0, min(queue_depth, self.max_queue_depth))
+        return n_ios / (self.rand_write_iops * qd) + extra / self.seq_write_iops
 
     @staticmethod
     def _pages(nbytes: float) -> float:
@@ -47,8 +58,12 @@ class StorageModel:
 
 
 # Table 2 of the paper
-HDD = StorageModel("HDD-WD10EZEX", 40_000, 36_000, 600, 300)
-SSD = StorageModel("SSD-Intel-750", 563_000, 230_000, 430_000, 230_000)
-OPTANE = StorageModel("OptaneSSD-P4800X", 614_000, 512_000, 550_000, 500_000)
+HDD = StorageModel("HDD-WD10EZEX", 40_000, 36_000, 600, 300, max_queue_depth=1.0)
+SSD = StorageModel(
+    "SSD-Intel-750", 563_000, 230_000, 430_000, 230_000, max_queue_depth=8.0
+)
+OPTANE = StorageModel(
+    "OptaneSSD-P4800X", 614_000, 512_000, 550_000, 500_000, max_queue_depth=16.0
+)
 
 STORAGE_MODELS = {"hdd": HDD, "ssd": SSD, "optane": OPTANE}

@@ -65,6 +65,8 @@ class Trainer:
         loop_cfg: TrainLoopConfig,
         opt_cfg: AdamWConfig = AdamWConfig(),
         put_fn: Optional[Callable] = None,
+        num_producers: int = 1,
+        recycle_fn: Optional[Callable] = None,
     ):
         self.cfg = cfg
         self.loop_cfg = loop_cfg
@@ -74,6 +76,8 @@ class Trainer:
             batch_iter_fn=lambda epoch: shuffler.epoch_batches(epoch),
             fetch_fn=fetch_fn,
             put_fn=put_fn,
+            num_producers=num_producers,
+            recycle_fn=recycle_fn,
         )
         self.step_fn = jax.jit(
             make_train_step(cfg, self.optimizer), donate_argnums=(0,)

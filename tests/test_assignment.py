@@ -1,7 +1,7 @@
 """Property tests for the random assignment tables (paper §4.1 + DESIGN §3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.assignment import FeistelAssignment, TableAssignment
 

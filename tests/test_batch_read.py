@@ -1,0 +1,332 @@
+"""Coalesced multi-queue batch materialization (the RecordStore hot path).
+
+Covers: extent planning (gap thresholds, duplicates, overlap), coalescing
+correctness vs the naive ``read_batch`` on fixed and variable stores,
+byte-identical results across worker counts, IOStats thread safety +
+coalescing accounting, and the buffer ring.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.core.location import LocationGenerator
+from repro.storage.record_store import (
+    PAGE,
+    BatchBufferRing,
+    IOStats,
+    RecordStore,
+    RecordWriter,
+    plan_extents,
+)
+
+
+# ----------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def fixed_store(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("br") / "fixed.rrec")
+    rng = np.random.default_rng(7)
+    recs = [rng.bytes(96) for _ in range(512)]
+    with RecordWriter(path, record_size=96) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    yield store, recs
+    store.close()
+
+
+@pytest.fixture(scope="module")
+def variable_store(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("br") / "var.rrec")
+    rng = np.random.default_rng(8)
+    recs = [rng.bytes(int(rng.integers(0, 200))) for _ in range(256)]
+    with RecordWriter(path) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    LocationGenerator().generate(store)
+    yield store, recs
+    store.close()
+
+
+# ------------------------------------------------------- extent planner
+def test_plan_merges_within_gap_and_splits_beyond():
+    offsets = np.array([0, 100, 300], dtype=np.int64)
+    lengths = np.array([50, 50, 50], dtype=np.int64)
+    # gaps: 100-50=50 and 300-150=150
+    exts = plan_extents(offsets, lengths, gap_bytes=50)
+    assert [(e.offset, e.length) for e in exts] == [(0, 150), (300, 50)]
+    exts = plan_extents(offsets, lengths, gap_bytes=150)
+    assert [(e.offset, e.length) for e in exts] == [(0, 350)]
+    # threshold is inclusive; one byte under splits
+    exts = plan_extents(offsets, lengths, gap_bytes=49)
+    assert len(exts) == 3
+
+
+def test_plan_gap_zero_merges_adjacent_and_negative_disables():
+    offsets = np.array([0, 50, 100], dtype=np.int64)
+    lengths = np.array([50, 50, 50], dtype=np.int64)
+    assert len(plan_extents(offsets, lengths, gap_bytes=0)) == 1
+    assert len(plan_extents(offsets, lengths, gap_bytes=-1)) == 3
+
+
+def test_plan_handles_duplicates_overlap_and_order():
+    offsets = np.array([500, 0, 500, 250], dtype=np.int64)
+    lengths = np.array([100, 100, 100, 400], dtype=np.int64)
+    exts = plan_extents(offsets, lengths, gap_bytes=0)
+    # record at 250 spans to 650, swallowing both copies of 500
+    assert [(e.offset, e.length) for e in exts] == [(0, 100), (250, 400)]
+    rows = np.concatenate([e.rows for e in exts])
+    assert sorted(rows.tolist()) == [0, 1, 2, 3]
+    # scatter offsets point inside the extent
+    for e in exts:
+        assert (e.rec_offsets >= 0).all()
+        assert (e.rec_offsets + e.rec_lengths <= e.length).all()
+
+
+def test_plan_empty_batch():
+    assert plan_extents(np.array([], np.int64), np.array([], np.int64), 0) == []
+
+
+# -------------------------------------------- coalescing correctness
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    batch=st.integers(1, 200),
+    gap=st.sampled_from([-1, 0, 1, 96, PAGE, 1 << 20]),
+)
+def test_fixed_matches_naive_read_batch(fixed_store, seed, batch, gap):
+    store, recs = fixed_store
+    idx = np.random.default_rng(seed).integers(0, len(recs), size=batch)
+    want = [recs[i] for i in idx]
+    out = store.read_batch_into(idx, gap_bytes=gap)
+    assert out.shape == (batch, 96) and out.dtype == np.uint8
+    assert [bytes(row) for row in out] == want
+    assert store.read_batch_coalesced(idx, gap_bytes=gap) == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), batch=st.integers(1, 150))
+def test_variable_matches_naive_read_batch(variable_store, seed, batch):
+    store, recs = variable_store
+    idx = np.random.default_rng(seed).integers(0, len(recs), size=batch)
+    want = [recs[i] for i in idx]
+    assert store.read_batch_coalesced(idx) == want
+    assert store.read_batch(idx) == want
+
+
+@pytest.mark.parametrize("workers", [1, 4, 8])
+@pytest.mark.parametrize("gap", [0, PAGE])
+def test_byte_identical_across_worker_counts(fixed_store, workers, gap):
+    store, recs = fixed_store
+    idx = np.random.default_rng(42).integers(0, len(recs), size=300)
+    out = store.read_batch_into(idx, gap_bytes=gap, workers=workers)
+    base = store.read_batch_into(idx, gap_bytes=gap, workers=1)
+    np.testing.assert_array_equal(out, base)
+    assert [bytes(r) for r in out] == [recs[i] for i in idx]
+    assert store.read_batch_coalesced(
+        idx, gap_bytes=gap, workers=workers
+    ) == [recs[i] for i in idx]
+
+
+def test_variable_workers_byte_identical(variable_store):
+    store, recs = variable_store
+    idx = np.random.default_rng(5).integers(0, len(recs), size=200)
+    want = [recs[i] for i in idx]
+    for workers in (1, 4, 8):
+        assert store.read_batch_coalesced(idx, workers=workers) == want
+
+
+def test_duplicates_and_preallocated_out(fixed_store):
+    store, recs = fixed_store
+    idx = np.array([3, 3, 3, 511, 0])
+    out = np.empty((5, 96), np.uint8)
+    got = store.read_batch_into(idx, out=out, workers=4)
+    assert got is out
+    assert [bytes(r) for r in out] == [recs[i] for i in idx]
+
+
+def test_read_batch_into_rejects_variable(variable_store):
+    store, _ = variable_store
+    with pytest.raises(ValueError, match="fixed-size"):
+        store.read_batch_into(np.array([0]))
+
+
+def test_read_batch_into_validates_out(fixed_store):
+    store, _ = fixed_store
+    with pytest.raises(ValueError, match="uint8"):
+        store.read_batch_into(np.array([0, 1]), out=np.empty((2, 96), np.int32))
+    with pytest.raises(ValueError, match="uint8"):
+        store.read_batch_into(np.array([0, 1]), out=np.empty((3, 96), np.uint8))
+
+
+def test_sequential_batch_is_one_extent_zero_copy(fixed_store):
+    """A dense ascending batch must collapse to a single range read."""
+    store, recs = fixed_store
+    store.stats.reset()
+    out = store.read_batch_into(np.arange(64), gap_bytes=0)
+    assert [bytes(r) for r in out] == recs[:64]
+    assert store.stats.batch_ios == 1
+    assert store.stats.coalesced_records == 64
+    assert store.stats.records_per_io == 64.0
+
+
+# ------------------------------------------------------------- IOStats
+def test_iostats_coalescing_counters(fixed_store):
+    store, _ = fixed_store
+    store.stats.reset()
+    # stride-2 pattern with gap below one record: no merging possible
+    store.read_batch_into(np.arange(0, 128, 2), gap_bytes=0)
+    assert store.stats.batch_ios == 64
+    assert store.stats.coalesced_ios == 0
+    assert store.stats.records_per_io == 1.0
+    store.stats.reset()
+    # the 96 B hole between stride-2 records merges once gap >= 96
+    store.read_batch_into(np.arange(0, 128, 2), gap_bytes=96)
+    assert store.stats.batch_ios == 1
+    assert store.stats.records_per_io == 64.0
+
+
+def test_iostats_thread_safety():
+    stats = IOStats()
+    N, T = 5000, 8
+
+    def hammer():
+        for i in range(N):
+            stats.account(i * PAGE, 10)  # page-aligned: exactly 1 page each
+
+    threads = [threading.Thread(target=hammer) for _ in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert stats.random_reads + stats.sequential_reads == N * T
+    assert stats.bytes_read == N * T * 10
+    assert stats.pages_read == N * T
+
+
+def test_naive_read_path_stats_unchanged(fixed_store):
+    """The seed counters keep their exact semantics."""
+    store, _ = fixed_store
+    store.stats.reset()
+    for i in [5, 50, 7, 99]:
+        store.read(i)
+    assert store.stats.random_reads == 4
+    assert store.stats.batch_ios == 0
+
+
+# --------------------------------------------------------- buffer ring
+def test_buffer_ring_reuse_and_misses():
+    ring = BatchBufferRing(32, 96, depth=2)
+    a = ring.acquire()
+    b = ring.acquire(20)  # short final batch: view of a ring buffer
+    assert a.shape == (32, 96) and b.shape == (20, 96)
+    c = ring.acquire()
+    assert ring.misses == 1
+    ring.recycle(a)
+    ring.recycle(b)
+    ring.recycle(c)  # miss-allocated buffer is not re-owned
+    assert len(ring._free) == 2
+    a2 = ring.acquire()
+    assert any(a2 is buf or a2.base is buf for buf in [a, b.base])
+    ring.recycle(np.zeros((32, 96), np.uint8))  # foreign array is ignored
+    assert len(ring._free) == 1
+    with pytest.raises(ValueError):
+        ring.acquire(33)
+
+
+def test_ring_with_read_batch_into(fixed_store):
+    store, recs = fixed_store
+    ring = BatchBufferRing(64, 96, depth=2)
+    for seed in range(4):
+        idx = np.random.default_rng(seed).integers(0, len(recs), size=64)
+        buf = ring.acquire()
+        out = store.read_batch_into(idx, out=buf, workers=2)
+        assert [bytes(r) for r in out] == [recs[i] for i in idx]
+        ring.recycle(buf)
+    assert ring.misses == 0
+
+
+# ------------------------------------------- cost model ↔ measurement
+def test_expected_coalescing_factor_tracks_measurement(tmp_path):
+    """The IOPlan analytic estimate must agree with the engine's measured
+    records_per_io within ~20% (it prices epochs without hardware)."""
+    from repro.core.shuffler import expected_coalescing_factor
+
+    rs, n, b, gap = 128, 16384, 1024, PAGE
+    path = str(tmp_path / "cm.rrec")
+    with RecordWriter(path, record_size=rs) as w:
+        for _ in range(n):
+            w.append(b"\0" * rs)
+    store = RecordStore(path)
+    idx = np.random.default_rng(3).permutation(n)[:b]
+    store.read_batch_into(idx, gap_bytes=gap)
+    measured = store.stats.records_per_io
+    model = expected_coalescing_factor(n, b, gap / rs)
+    assert measured > 1.5                      # merging actually happened
+    assert abs(model - measured) / measured < 0.2
+    store.close()
+
+
+def test_expected_coalescing_factor_limits():
+    from repro.core.shuffler import expected_coalescing_factor
+
+    assert expected_coalescing_factor(1000, 1, 10) == 1.0
+    # whole-dataset batch with any gap coalesces to ~B records per io
+    assert expected_coalescing_factor(1000, 1000, 1) > 400
+    # monotone in gap
+    f = [expected_coalescing_factor(10_000, 1000, g) for g in (0, 4, 16, 64)]
+    assert f == sorted(f)
+
+
+# ------------------------------------------------ dense decoder parity
+def test_decoders_array_vs_bytes_parity(tmp_path):
+    """The ndarray fast paths of decode_dense_batch / decode_token_batch
+    must match the per-record bytes paths exactly (incl. truncation)."""
+    from repro.data.synthetic import (
+        decode_dense_batch,
+        decode_token_batch,
+        make_classification_dataset,
+        make_token_dataset,
+    )
+
+    meta = make_classification_dataset(str(tmp_path / "d.rrec"), 32, 8, seed=1)
+    store = RecordStore(meta.path)
+    idx = np.arange(32)
+    xs_a, ys_a = decode_dense_batch(store.read_batch_into(idx), 8)
+    xs_b, ys_b = decode_dense_batch(store.read_batch(idx), 8)
+    np.testing.assert_array_equal(xs_a, xs_b)
+    np.testing.assert_array_equal(ys_a, ys_b)
+    store.close()
+
+    meta = make_token_dataset(str(tmp_path / "t.rrec"), 16, 12, 64, seed=2)
+    store = RecordStore(meta.path)
+    idx = np.random.default_rng(0).integers(0, 16, size=10)
+    d_a = decode_token_batch(store.read_batch_into(idx), 12)
+    d_b = decode_token_batch(store.read_batch(idx), 12)
+    np.testing.assert_array_equal(d_a["tokens"], d_b["tokens"])
+    np.testing.assert_array_equal(d_a["labels"], d_b["labels"])
+    # truncation parity for records wider than seq_len+1
+    d_c = decode_token_batch(store.read_batch_into(idx), 5)
+    assert d_c["tokens"].shape == (10, 5)
+    np.testing.assert_array_equal(d_c["tokens"], d_a["tokens"][:, :5])
+    store.close()
+
+
+def test_io_plan_coalescing_prices_fewer_ios():
+    from repro.core.shuffler import LIRSShuffler
+    from repro.storage.devices import OPTANE
+
+    sh = LIRSShuffler(65536, 4096, avg_instance_bytes=256.0)
+    base = sh.io_plan(65536 * 256.0, is_sparse=False)
+    mq = sh.io_plan(
+        65536 * 256.0, is_sparse=False, coalesce_gap=4 * PAGE, queue_depth=8
+    )
+    assert mq.coalescing_factor > 5
+    assert mq.epoch_rand_read_ios < base.epoch_rand_read_ios / 5
+    t_base = OPTANE.t_rand_read(base.epoch_rand_read_ios, base.epoch_rand_read_bytes)
+    t_mq = OPTANE.t_rand_read(
+        mq.epoch_rand_read_ios, mq.epoch_rand_read_bytes, queue_depth=mq.queue_depth
+    )
+    assert t_mq < t_base

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.train.compression import (
     EFCompressor,
@@ -71,7 +71,10 @@ def test_compressed_psum_single_shard_roundtrip():
     """On a 1-wide axis the compressed psum must be ~identity (within
     quantization error)."""
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # older jax
+        from jax.experimental.shard_map import shard_map
 
     mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
     x = jnp.asarray(np.random.default_rng(1).normal(size=(128,)), jnp.float32)

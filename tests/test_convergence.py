@@ -5,6 +5,8 @@ benchmarks/ (svm_convergence, dnn_convergence, queue_size)."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavy; excluded from tier-1 (see pytest.ini)
+
 from repro.core.shuffler import BMFShuffler, LIRSShuffler, TFIPShuffler
 from repro.dnn.mlp import MLPClassifier, make_clustered_data
 from repro.svm.dcd import DCDSolver

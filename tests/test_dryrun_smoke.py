@@ -5,6 +5,8 @@ with forced host devices)."""
 import jax
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow  # heavy; excluded from tier-1 (see pytest.ini)
 from jax.sharding import NamedSharding
 
 from repro.configs import get_config

@@ -162,3 +162,45 @@ def test_flash_decode_respects_cache_length():
     v2 = v.at[:, 101:].set(-999.0)
     out2 = ops.flash_decode(q, k2, v2, cur, block_k=64)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# ----------------------------------------------------- batch_gather_dma
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize(
+    "n,d,b,block_d,rows_per_step",
+    [(64, 256, 16, 128, 8), (128, 512, 5, 512, 8), (32, 128, 32, 128, 1),
+     (64, 128, 7, 128, 16)],
+)
+def test_batch_gather_dma_bit_exact(n, d, b, block_d, rows_per_step, dtype):
+    """The multi-row double-buffered DMA variant must match the reference
+    gather bit-exactly (including ragged batch → padded grid)."""
+    table = _rand((n, d), dtype) if dtype != jnp.int32 else jnp.asarray(
+        RNG.integers(0, 100, size=(n, d)), jnp.int32
+    )
+    idx = jnp.asarray(RNG.integers(0, n, size=b), jnp.int32)
+    out = ops.batch_gather_dma(
+        table, idx, block_d=block_d, rows_per_step=rows_per_step
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.batch_gather_ref(table, idx))
+    )
+
+
+@pytest.mark.parametrize("rows", [2, 4])
+def test_batch_gather_dma_page_blocks(rows):
+    table = _rand((128, 256), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, 128 // rows, size=8), jnp.int32)
+    out = ops.batch_gather_dma(table, idx, rows_per_block=rows, rows_per_step=4)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.batch_gather_ref(table, idx, rows))
+    )
+
+
+def test_batch_gather_dma_matches_single_row_variant():
+    table = _rand((256, 512), jnp.bfloat16)
+    idx = jnp.asarray(RNG.integers(0, 256, size=64), jnp.int32)
+    a = ops.batch_gather(table, idx)
+    b = ops.batch_gather_dma(table, idx, rows_per_step=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

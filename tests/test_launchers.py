@@ -4,6 +4,8 @@ import json
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavy; excluded from tier-1 (see pytest.ini)
+
 
 def test_train_launcher_runs_and_resumes(tmp_path):
     from repro.launch.train import main

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavy; excluded from tier-1 (see pytest.ini)
+
 from repro.layers import attention as A
 from repro.layers import moe as moe_lib
 from repro.layers import rglru as R

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavy; excluded from tier-1 (see pytest.ini)
+
 from repro.configs import ARCH_IDS, get_config
 from repro.models import model as M
 

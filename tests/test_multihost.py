@@ -4,6 +4,8 @@ checkpointing and serving-cache growth."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavy; excluded from tier-1 (see pytest.ini)
+
 import jax
 import jax.numpy as jnp
 

@@ -1,7 +1,7 @@
 """Sharded sampler: disjointness, host-count invariance, resume, elastic."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.sampler import ShardedSampler
 

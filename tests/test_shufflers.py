@@ -1,7 +1,7 @@
 """Shuffler semantics: coverage, page cohesion, window limits, BMF blocks."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.shuffler import BMFShuffler, LIRSShuffler, TFIPShuffler
 

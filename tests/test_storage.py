@@ -3,7 +3,7 @@ import struct
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.location import LocationGenerator
 from repro.storage.devices import HDD, OPTANE, SSD

@@ -3,6 +3,8 @@ LIRS pipeline, fault-tolerant resume, checkpoint integrity, optimizer."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavy; excluded from tier-1 (see pytest.ini)
+
 import jax
 import jax.numpy as jnp
 
