@@ -1,0 +1,177 @@
+"""ragged_read — throughput of the ragged arena batch engine.
+
+The variable-length sibling of benchmarks/batch_read, on a synthetic
+sparse SVM store (kdd12-style ultra-sparse records via
+``make_classification_dataset``; batch 4096 == the paper's n/10 block).
+Two layers are measured at several batch sizes:
+
+``read`` — records/s for batch materialization alone:
+  * ``naive``      — per-record ``read_batch`` loop (seed baseline)
+  * ``coalesced``  — ``read_batch_coalesced``: merged range reads, but
+                     per-record Python slicing into ``List[bytes]``
+                     (what variable stores used before this engine)
+  * ``ragged``     — ``read_batch_ragged``: same merged range reads,
+                     scattered into ONE dense arena + (offsets, lengths)
+                     via a single vectorized (word-wide) gather
+  * ``ragged@N``   — the same fanned across N reader threads
+
+``csr`` — records/s through to *device-ready CSR arrays* (what the DCD
+solver consumes): ``coalesced`` + per-record parse vs ``ragged`` +
+vectorized ``pack_csr_batch``.  This is the end-to-end hot path the
+paper's SVM results ride on, and the acceptance number: ``csr/ragged``
+vs ``csr/coalesced`` at batch 4096 (the raw ``read`` ratio is reported
+alongside).
+
+Also reports measured coalescing efficiency (records per syscall) next
+to the cost model's ``expected_ragged_coalescing_factor`` prediction,
+and prices one ragged epoch on each Table 2 device via
+``StorageModel.t_epoch_read``.
+
+Emits JSON to benchmarks/results/ragged_read.json (the BENCH trajectory
+contract) and harness CSV rows with the speedup over the per-record
+slicing path as *derived*.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import cached
+from repro.core.location import LocationGenerator
+from repro.core.shuffler import LIRSShuffler, expected_ragged_coalescing_factor
+from repro.data.synthetic import make_classification_dataset
+from repro.storage.devices import STORAGE_MODELS
+from repro.storage.record_store import PAGE, RecordStore
+from repro.svm.sparse import pack_csr_batch
+
+N_RECORDS = 40_960
+DIM = 4096
+NNZ_RANGE = (1, 6)   # ultra-sparse (kdd12-style): mean record ~36 B
+BATCHES = [256, 1024, 4096]
+WORKER_COUNTS = [4, 8]
+GAP = 4 * PAGE
+REPS = 9
+
+
+def _interleaved_records_per_s(variants, batch: int, reps: int = REPS):
+    """Best-of-``reps`` records/s for every variant, measured round-robin
+    so all variants sample the same machine conditions each round (a
+    sequential best-of lets one variant catch a quiet period the others
+    never see, which skews the ratios on noisy boxes)."""
+    best = {name: float("inf") for name, _ in variants}
+    for _ in range(reps):
+        for name, fn in variants:
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: batch / t for name, t in best.items()}
+
+
+def run(force: bool = False):
+    def compute():
+        tmp = tempfile.mkdtemp()
+        meta = make_classification_dataset(
+            f"{tmp}/ragged.rrec", N_RECORDS, DIM,
+            sparse=True, nnz_range=NNZ_RANGE, seed=0,
+        )
+        store = RecordStore(meta.path)
+        LocationGenerator().generate(store)
+        rng = np.random.default_rng(1)
+        out = {
+            "num_records": N_RECORDS,
+            "dim": DIM,
+            "mean_record_bytes": meta.avg_record_bytes,
+            "gap_bytes": GAP,
+            "batches": {},
+        }
+        for b in BATCHES:
+            idx = rng.permutation(N_RECORDS)[:b]
+            read_variants = [
+                ("naive", lambda: store.read_batch(idx)),
+                (
+                    "coalesced",
+                    lambda: store.read_batch_coalesced(idx, gap_bytes=GAP),
+                ),
+                ("ragged", lambda: store.read_batch_ragged(idx, gap_bytes=GAP)),
+            ] + [
+                (
+                    f"ragged@{wk}",
+                    lambda wk=wk: store.read_batch_ragged(
+                        idx, gap_bytes=GAP, workers=wk
+                    ),
+                )
+                for wk in WORKER_COUNTS
+            ]
+            read = _interleaved_records_per_s(read_variants, b)
+            csr = _interleaved_records_per_s(
+                [
+                    (
+                        "coalesced",
+                        lambda: pack_csr_batch(
+                            store.read_batch_coalesced(idx, gap_bytes=GAP)
+                        ),
+                    ),
+                    (
+                        "ragged",
+                        lambda: pack_csr_batch(
+                            store.read_batch_ragged(idx, gap_bytes=GAP)
+                        ),
+                    ),
+                ],
+                b,
+            )
+            store.stats.reset()
+            store.read_batch_ragged(idx, gap_bytes=GAP)
+            out["batches"][str(b)] = {
+                "read": read,
+                "csr": csr,
+                "records_per_io": store.stats.records_per_io,
+                "model_records_per_io": expected_ragged_coalescing_factor(
+                    N_RECORDS, b, GAP, meta.avg_record_bytes
+                ),
+                "read_speedup_vs_slicing": read["ragged"] / read["coalesced"],
+                "csr_speedup_vs_slicing": csr["ragged"] / csr["coalesced"],
+            }
+        # price one ragged epoch on each Table 2 device from the IOPlan
+        sh = LIRSShuffler(
+            N_RECORDS, BATCHES[-1], avg_instance_bytes=meta.avg_record_bytes
+        )
+        plan = sh.io_plan(
+            meta.total_bytes, is_sparse=True,
+            coalesce_gap=GAP, queue_depth=max(WORKER_COUNTS),
+        )
+        out["modeled_epoch_read_s"] = {
+            name: dev.t_epoch_read(plan)
+            for name, dev in STORAGE_MODELS.items()
+        }
+        store.close()
+        return out
+
+    return cached("ragged_read", compute, force)
+
+
+def rows():
+    res = run()
+    out = []
+    for b, entry in res["batches"].items():
+        for layer in ("read", "csr"):
+            slicing = entry[layer]["coalesced"]
+            for variant, rps in entry[layer].items():
+                out.append(
+                    (
+                        f"ragged_read/b{b}/{layer}/{variant}",
+                        1e6 / rps,  # us per record
+                        f"{rps:,.0f} rec/s x{rps / slicing:.1f} vs slicing "
+                        f"coalesce={entry['records_per_io']:.1f} "
+                        f"(model {entry['model_records_per_io']:.1f})",
+                    )
+                )
+    return out
+
+
+if __name__ == "__main__":
+    run(force=True)
+    for r in rows():
+        print(",".join(map(str, r)))

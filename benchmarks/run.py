@@ -23,6 +23,7 @@ def main() -> None:
         page_aware,
         pipeline_throughput,
         queue_size,
+        ragged_read,
         roofline,
         svm_convergence,
         training_time,
@@ -37,6 +38,7 @@ def main() -> None:
         "memory_overhead": memory_overhead,     # Table 5
         "pipeline_throughput": pipeline_throughput,
         "batch_read": batch_read,               # coalesced multi-queue engine
+        "ragged_read": ragged_read,             # ragged arena engine (sparse)
         "roofline": roofline,                   # §Roofline (from dry-run)
     }
     if args.only:

@@ -86,11 +86,11 @@ def lirs_mq_total(w: Workload, dev: StorageModel) -> float:
     range reads shrink the random-I/O count by the expected coalescing
     factor, and reader-thread queue depth scales the device's effective
     random IOPS (up to its ``max_queue_depth``)."""
-    from repro.core.shuffler import expected_coalescing_factor
+    from repro.core.shuffler import expected_ragged_coalescing_factor
 
     avg_bytes = w.total_bytes / w.instances
-    factor = expected_coalescing_factor(
-        w.instances, MQ_BATCH, MQ_GAP_BYTES / avg_bytes
+    factor = expected_ragged_coalescing_factor(
+        w.instances, MQ_BATCH, MQ_GAP_BYTES, avg_bytes
     )
     t_pre = dev.t_seq_read(w.total_bytes) if w.sparse else 0.0
     t_load = dev.t_rand_read(

@@ -8,6 +8,7 @@
 """
 from repro.core.assignment import FeistelAssignment, TableAssignment  # noqa: F401
 from repro.core.location import LocationGenerator  # noqa: F401
+from repro.core.pipeline import InputPipeline, store_fetch_fn  # noqa: F401
 from repro.core.sampler import ShardedSampler  # noqa: F401
 from repro.core.shuffler import (  # noqa: F401
     BMFShuffler,

@@ -18,9 +18,15 @@ side and remains wall-accurate.
 
 The pipeline is storage-agnostic: LIRS shufflers drive random reads into a
 RecordStore, BMF/TFIP drive sequential reads, and the same accounting
-applies to both.  ``recycle_fn`` (e.g. ``BatchBufferRing.recycle``) is
-called with each *fetched* item once the consumer has moved past it,
-enabling zero-allocation steady state with reused destination buffers.
+applies to both.  ``recycle_fn`` (e.g. ``BatchBufferRing.recycle`` or
+``RaggedBufferRing.recycle``) is called with each *fetched* item once the
+consumer has moved past it, enabling zero-allocation steady state with
+reused destination buffers.  Items can be anything — dense ``(B, R)``
+arrays from ``read_batch_into`` or ragged arena triples
+(:class:`~repro.storage.record_store.RaggedBatch`) from
+``read_batch_ragged`` — the multi-producer ordered reassembly and the
+recycle contract are identical for both; :func:`store_fetch_fn` builds
+the matching fetch function for a store.
 """
 from __future__ import annotations
 
@@ -31,6 +37,13 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator, Optional
 
 import numpy as np
+
+from repro.storage.record_store import (
+    PAGE,
+    BatchBufferRing,
+    RaggedBufferRing,
+    RecordStore,
+)
 
 
 @dataclass
@@ -232,6 +245,62 @@ class InputPipeline:
                 th.join()
         if err:
             raise err[0]
+
+
+def store_fetch_fn(
+    store: RecordStore,
+    *,
+    mode: str = "auto",
+    ring: Optional[Any] = None,
+    gap_bytes: int = PAGE,
+    workers: int = 1,
+) -> Callable[[np.ndarray], Any]:
+    """Build an :class:`InputPipeline` ``fetch_fn`` over a record store.
+
+    ``mode='dense'`` materializes fixed-size batches with
+    ``read_batch_into`` (into ``ring`` buffers when given a
+    :class:`~repro.storage.record_store.BatchBufferRing`); ``mode='ragged'``
+    materializes variable-length batches with ``read_batch_ragged`` (arena
+    triples, optionally from a
+    :class:`~repro.storage.record_store.RaggedBufferRing`).  ``'auto'``
+    picks ragged for variable-length stores and dense otherwise — the one
+    decision point where the two hot paths diverge.
+
+    Pair with ``InputPipeline(recycle_fn=ring.recycle)`` for the
+    allocation-free steady state; both ring classes ignore foreign arrays,
+    so the blanket recycle is safe even for miss-allocated batches.
+    """
+    if mode == "auto":
+        mode = "ragged" if store.variable else "dense"
+    if mode == "dense":
+        if store.variable:
+            raise ValueError("dense mode needs a fixed-size store")
+        if ring is not None and not isinstance(ring, BatchBufferRing):
+            raise TypeError("dense mode takes a BatchBufferRing")
+
+        def fetch_dense(idx: np.ndarray):
+            out = ring.acquire(len(idx)) if ring is not None else None
+            try:
+                return store.read_batch_into(
+                    idx, out=out, gap_bytes=gap_bytes, workers=workers
+                )
+            except BaseException:
+                if out is not None:
+                    ring.recycle(out)  # failed fetch must not drain the ring
+                raise
+
+        return fetch_dense
+    if mode != "ragged":
+        raise ValueError(f"mode must be auto|dense|ragged, got {mode!r}")
+    if ring is not None and not isinstance(ring, RaggedBufferRing):
+        raise TypeError("ragged mode takes a RaggedBufferRing")
+
+    def fetch_ragged(idx: np.ndarray):
+        return store.read_batch_ragged(
+            idx, gap_bytes=gap_bytes, workers=workers, ring=ring
+        )
+
+    return fetch_ragged
 
 
 def _put_until(q: "queue.Queue", item: Any, stop: threading.Event) -> bool:

@@ -35,7 +35,12 @@ class IOPlan:
     range reads, not records.  ``coalescing_factor`` (records per random
     I/O) and ``queue_depth`` (concurrent reader threads) record how the
     batch engine was configured so the device models can price the epoch
-    at the right effective IOPS.
+    at the right effective IOPS.  ``mean_record_bytes`` carries the
+    dataset's mean instance size — for ragged (variable-length) stores
+    it is what converts the byte-denominated merge gap into record units,
+    so the same geometric coalescing model prices non-uniform extents.
+    ``StorageModel.t_epoch_read`` / ``t_preprocess`` consume a plan
+    directly.
     """
 
     preprocess_seq_read_bytes: float = 0.0
@@ -46,6 +51,7 @@ class IOPlan:
     epoch_rand_read_bytes: float = 0.0
     coalescing_factor: float = 1.0
     queue_depth: float = 1.0
+    mean_record_bytes: float = 0.0
 
 
 def expected_coalescing_factor(
@@ -68,6 +74,28 @@ def expected_coalescing_factor(
     survive = (1.0 - p) ** (1.0 + max(0.0, gap_records))
     extents = 1.0 + (b - 1) * survive
     return b / extents
+
+
+def expected_ragged_coalescing_factor(
+    num_items: int, batch_size: int, gap_bytes: float, mean_record_bytes: float
+) -> float:
+    """Expected records per coalesced I/O over a *variable-length* store.
+
+    Two sorted batch neighbours spaced ``s`` records apart are separated
+    by the ``s − 1`` records between them, whose total size concentrates
+    around ``(s − 1)·μ`` for mean record size μ.  Pricing the byte gap at
+    its mean reduces the ragged case to the dense formula with
+    ``gap_records = gap_bytes / μ`` — a mean-field approximation that is
+    first-order exact (length fluctuations only perturb merges whose gap
+    lands within one record-size deviation of the threshold, a
+    vanishing fraction as B grows; the ragged_read benchmark checks the
+    model against measured ``records_per_io``).
+    """
+    if mean_record_bytes <= 0:
+        return 1.0
+    return expected_coalescing_factor(
+        num_items, batch_size, gap_bytes / mean_record_bytes
+    )
 
 
 class LIRSShuffler:
@@ -132,6 +160,7 @@ class LIRSShuffler:
         and queue depth is forwarded for the device models' concurrency
         scaling (``StorageModel.t_rand_read``)."""
         plan = IOPlan()
+        plan.mean_record_bytes = self.avg_instance_bytes
         if is_sparse:  # offset-table scan (Fig 7b)
             plan.preprocess_seq_read_bytes = total_bytes
         if self.page_aware:
@@ -139,10 +168,13 @@ class LIRSShuffler:
         else:
             n_ios = self.num_items
         if coalesce_gap > 0 and self.avg_instance_bytes > 0 and not self.page_aware:
-            plan.coalescing_factor = expected_coalescing_factor(
+            # same geometric model for fixed and ragged stores: the byte
+            # gap is priced in units of the mean record size
+            plan.coalescing_factor = expected_ragged_coalescing_factor(
                 self.num_items,
                 self.batch_size,
-                coalesce_gap / self.avg_instance_bytes,
+                coalesce_gap,
+                self.avg_instance_bytes,
             )
             n_ios = n_ios / plan.coalescing_factor
         plan.queue_depth = max(1.0, queue_depth)

@@ -129,7 +129,9 @@ def decode_sparse(raw: bytes, dim: int) -> Tuple[np.float32, np.ndarray]:
     idx = np.frombuffer(raw, np.uint32, count=nnz, offset=8)
     val = np.frombuffer(raw, np.float32, count=nnz, offset=8 + 4 * nnz)
     x = np.zeros(dim, np.float32)
-    x[idx] = val
+    # accumulate (not overwrite) duplicate ids: CSR semantics, identical
+    # to the ragged-arena fast path (repro.svm.sparse.csr_to_dense)
+    np.add.at(x, idx.astype(np.int64), val)
     return y, x
 
 
@@ -148,6 +150,14 @@ def decode_dense_batch(raws, dim: int):
 
 
 def decode_sparse_batch(raws, dim: int):
+    from repro.storage.record_store import RaggedBatch
+
+    if isinstance(raws, RaggedBatch):
+        # arena fast path: vectorized CSR parse (repro.svm.sparse), then
+        # densify — no per-record Python
+        from repro.svm.sparse import csr_to_dense, pack_csr_batch
+
+        return csr_to_dense(pack_csr_batch(raws, dim), dim)
     ys = np.empty(len(raws), np.float32)
     xs = np.empty((len(raws), dim), np.float32)
     for i, r in enumerate(raws):

@@ -10,6 +10,7 @@ import jax
 
 from repro.kernels.batch_gather import batch_gather as _batch_gather
 from repro.kernels.batch_gather import batch_gather_dma as _batch_gather_dma
+from repro.kernels.csr_dot import csr_dot as _csr_dot
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.rglru_scan import rglru_scan as _rglru_scan
 
@@ -31,6 +32,15 @@ def batch_gather_dma(table, indices, *, block_d: int = 512,
     return _batch_gather_dma(
         table, indices, block_d=block_d, rows_per_block=rows_per_block,
         rows_per_step=rows_per_step,
+        interpret=INTERPRET if interpret is None else interpret,
+    )
+
+
+def csr_dot(indices, values, w, *, block_b: int = 8, gather: str = "take",
+            interpret: bool | None = None):
+    """Segment-gather CSR·vector inner products (sparse SVM hot path)."""
+    return _csr_dot(
+        indices, values, w, block_b=block_b, gather=gather,
         interpret=INTERPRET if interpret is None else interpret,
     )
 

@@ -14,6 +14,18 @@ def batch_gather_ref(table, indices, rows_per_block: int = 1):
     return blocks[indices].reshape(indices.shape[0] * r, d)
 
 
+@jax.jit
+def csr_dot_ref(indices, values, w):
+    """Padded-CSR inner products: ``out[b] = Σ_k values[b,k]·w[indices[b,k]]``.
+
+    The einsum-style oracle for the Pallas ``csr_dot`` kernel.  Jitted so
+    the comparison is bit-exact: XLA's compiled gather→mul→reduce emits
+    the same accumulation order at any leading batch extent, whereas the
+    eager path reassociates differently (~1 ulp)."""
+    gathered = w.astype(jnp.float32)[indices]
+    return jnp.sum(values.astype(jnp.float32) * gathered, axis=-1)
+
+
 def flash_attention_ref(q, k, v, causal: bool = True):
     """q: (B,S,H,D); k,v: (B,T,K,D) — plain softmax attention, f32 math."""
     b, s, h, d = q.shape

@@ -1,3 +1,9 @@
-from repro.storage.record_store import RecordStore, RecordWriter  # noqa: F401
+from repro.storage.record_store import (  # noqa: F401
+    BatchBufferRing,
+    RaggedBatch,
+    RaggedBufferRing,
+    RecordStore,
+    RecordWriter,
+)
 from repro.storage.devices import STORAGE_MODELS, StorageModel  # noqa: F401
 from repro.storage.page_cache import LRUPageCache  # noqa: F401

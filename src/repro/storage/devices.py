@@ -52,6 +52,43 @@ class StorageModel:
         qd = max(1.0, min(queue_depth, self.max_queue_depth))
         return n_ios / (self.rand_write_iops * qd) + extra / self.seq_write_iops
 
+    # --------------------------------------------------- IOPlan pricing
+    def t_epoch_read(self, plan) -> float:
+        """Per-epoch read time for an ``IOPlan`` (duck-typed to avoid a
+        storage→core import cycle).
+
+        Sequential volume streams at sequential speed; the random part is
+        priced at the plan's *issued* I/O count (already divided by the
+        coalescing factor for batch engines — dense or ragged) with the
+        plan's queue depth overlapping per-op latency up to
+        ``max_queue_depth``."""
+        t = 0.0
+        if plan.epoch_seq_read_bytes:
+            t += self.t_seq_read(plan.epoch_seq_read_bytes)
+        if plan.epoch_rand_read_ios:
+            t += self.t_rand_read(
+                plan.epoch_rand_read_ios,
+                plan.epoch_rand_read_bytes,
+                queue_depth=getattr(plan, "queue_depth", 1.0),
+            )
+        return t
+
+    def t_preprocess(self, plan) -> float:
+        """One-time pre-processing cost of an ``IOPlan`` (BMF/TFIP shuffle
+        write-back, or the sparse offset-table scan for LIRS)."""
+        t = 0.0
+        if plan.preprocess_seq_read_bytes:
+            t += self.t_seq_read(plan.preprocess_seq_read_bytes)
+        if plan.preprocess_rand_write_ios:
+            t += self.t_rand_write(
+                plan.preprocess_rand_write_ios, plan.preprocess_rand_write_bytes
+            )
+        return t
+
+    def t_total(self, plan, epochs: int) -> float:
+        """Paper Eq. 1's storage term: preprocess + epochs · per-epoch."""
+        return self.t_preprocess(plan) + epochs * self.t_epoch_read(plan)
+
     @staticmethod
     def _pages(nbytes: float) -> float:
         return max(1.0, nbytes / PAGE) if nbytes > 0 else 0.0

@@ -25,6 +25,19 @@ GIL-releasing reader threads, emulating NVM I/O queue depth > 1 (the regime
 where random reads match sequential throughput).  ``IOStats`` is
 thread-safe and tracks coalescing efficiency so the paper's cost model can
 still price every epoch.
+
+Variable-length (sparse) stores get the same treatment through
+``read_batch_ragged``: the coalescing plan is computed entirely in NumPy,
+extents land back-to-back in a scratch buffer, and the whole batch
+materializes into ONE dense byte *arena* plus ``(offsets, lengths)`` int32
+arrays with a single vectorized gather — no per-record ``bytes`` objects,
+no per-record Python.  ``RaggedBufferRing`` recycles arena triples for an
+allocation-free steady state, mirroring ``BatchBufferRing`` on the dense
+side.
+
+I/O accounting happens *after* the extent reads succeed: a batch that dies
+on a short ``pread`` and is retried by the caller is charged once, for the
+attempt that actually served records (see ``IOStats``).
 """
 from __future__ import annotations
 
@@ -33,7 +46,7 @@ import struct
 import threading
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Iterable, List, Optional, Sequence
+from typing import Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -164,6 +177,37 @@ class ReadExtent:
     rec_lengths: np.ndarray
 
 
+def _sorted_plan(
+    offsets: np.ndarray, lengths: np.ndarray, gap_bytes: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Shared coalescing core: offset-sort the batch and mark extent cuts.
+
+    Returns ``(order, soff, slen, ends, new_ext)`` where ``order`` sorts
+    the batch by offset, ``ends`` is the running furthest byte covered
+    (so overlapping/duplicate records extend, never shrink, an extent)
+    and ``new_ext[k]`` is True when sorted record ``k`` starts a new
+    extent.  Both :func:`plan_extents` and the ragged/dense batch readers
+    derive their plans from this single cut rule, so their merge
+    semantics are identical by construction.
+    """
+    key = offsets
+    if key.size and key.dtype == np.int64:
+        # int32 radix sort is ~2× faster, and offsets fit whenever the
+        # store is under 2 GiB (the common dataset regime)
+        if 0 <= int(key.min()) and int(key.max()) <= np.iinfo(np.int32).max:
+            key = key.astype(np.int32)
+    order = np.argsort(key, kind="stable")
+    soff = offsets[order]
+    slen = lengths[order]
+    ends = np.maximum.accumulate(soff + slen)
+    n = len(offsets)
+    new_ext = np.empty(n, dtype=bool)
+    new_ext[0] = True
+    # gap between record k+1's start and the furthest byte covered so far
+    new_ext[1:] = soff[1:] - ends[:-1] > gap_bytes
+    return order, soff, slen, ends, new_ext
+
+
 def plan_extents(
     offsets: np.ndarray, lengths: np.ndarray, gap_bytes: int
 ) -> List[ReadExtent]:
@@ -179,13 +223,8 @@ def plan_extents(
     n = len(offsets)
     if n == 0:
         return []
-    order = np.argsort(offsets, kind="stable")
-    soff = offsets[order]
-    slen = lengths[order]
-    ends = np.maximum.accumulate(soff + slen)
-    # gap between record k+1's start and the furthest byte covered so far
-    gaps = soff[1:] - ends[:-1]
-    cuts = np.flatnonzero(gaps > gap_bytes) + 1
+    order, soff, slen, ends, new_ext = _sorted_plan(offsets, lengths, gap_bytes)
+    cuts = np.flatnonzero(new_ext[1:]) + 1
     extents: List[ReadExtent] = []
     for grp in np.split(np.arange(n), cuts):
         start = int(soff[grp[0]])
@@ -200,6 +239,35 @@ def plan_extents(
             )
         )
     return extents
+
+
+class RaggedBatch(NamedTuple):
+    """A variable-length batch materialized as one dense byte arena.
+
+    ``arena[offsets[i] : offsets[i] + lengths[i]]`` is record ``i``'s
+    payload; records are packed back-to-back in batch order, so
+    ``offsets`` is the exclusive prefix sum of ``lengths`` and
+    ``arena.size == lengths.sum()``.  Offsets are int32 (a single batch
+    arena is capped at 2 GiB) — the shape consumed directly by CSR-style
+    device packers.
+    """
+
+    arena: np.ndarray    # uint8 (total_bytes,)
+    offsets: np.ndarray  # int32 (B,) start of record i within the arena
+    lengths: np.ndarray  # int32 (B,) payload bytes of record i
+
+    def __len__(self) -> int:
+        return len(self.offsets)
+
+    def record(self, i: int) -> np.ndarray:
+        """Zero-copy uint8 view of record ``i``."""
+        o = int(self.offsets[i])
+        return self.arena[o : o + int(self.lengths[i])]
+
+    def tolist(self) -> List[bytes]:
+        """Materialize per-record ``bytes`` (test/compat path — the hot
+        path never does this)."""
+        return [bytes(self.record(i)) for i in range(len(self))]
 
 
 def _pread_full(fd: int, buf, offset: int):
@@ -279,6 +347,11 @@ class RecordStore:
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pool_size = 0
         self._pool_lock = threading.Lock()
+        # reusable scratch buffers for the ragged path: a fresh multi-MB
+        # np.empty per batch costs a mmap + page faults; steady state
+        # should recycle (bounded, concurrent-reader safe)
+        self._scratch_pool: List[np.ndarray] = []
+        self._scratch_lock = threading.Lock()
         # offsets/lengths are installed by the location generator (sparse)
         # or derived arithmetically (fixed)
         self._offsets: Optional[np.ndarray] = None
@@ -334,6 +407,19 @@ class RecordStore:
         if self.variable:
             offs = offs + 4  # skip the u32 length prefix
         return plan_extents(offs, lens, gap_bytes)
+
+    def _acquire_scratch(self, nbytes: int) -> np.ndarray:
+        """A reusable uint8 buffer of at least ``nbytes`` (first fit)."""
+        with self._scratch_lock:
+            for i, buf in enumerate(self._scratch_pool):
+                if buf.size >= nbytes:
+                    return self._scratch_pool.pop(i)
+        return np.empty(nbytes, np.uint8)
+
+    def _release_scratch(self, buf: np.ndarray):
+        with self._scratch_lock:
+            if len(self._scratch_pool) < 4:
+                self._scratch_pool.append(buf)
 
     def _workers_map(self, fn, extents: List[ReadExtent], workers: int):
         """Run ``fn(chunk)`` over contiguous extent chunks on the pool."""
@@ -418,7 +504,6 @@ class RecordStore:
         ext_off = HEADER_SIZE + first * rs
         ext_len = span * rs
         ext_recs = np.diff(np.append(starts, b))  # batch records per extent
-        self.stats.account_batch(ext_off, ext_len, ext_recs)
 
         # single-record extents preadv straight into their destination row
         # (zero copy); merged extents land back-to-back in a scratch arena
@@ -445,6 +530,10 @@ class RecordStore:
                 _pread_full(fd, dst, int(ext_off[e]))
 
         self._workers_map(work, list(range(len(starts))), workers)
+        # account only after every extent read succeeded: a batch that died
+        # on a short pread and is retried by the caller must not charge the
+        # same extents twice (records_per_io would drift otherwise)
+        self.stats.account_batch(ext_off, ext_len, ext_recs)
         if pos_multi.any():
             out[order[pos_multi]] = arena[slots[pos_multi]]
         return out
@@ -460,7 +549,6 @@ class RecordStore:
         :meth:`read_batch`; works for fixed and variable-length stores)."""
         idx = np.asarray(indices, dtype=np.int64)
         extents = self.plan_batch(idx, gap_bytes)
-        self.stats.account_plan(extents)
         out: List[Optional[bytes]] = [None] * len(idx)
         fd = self._fd
 
@@ -472,7 +560,141 @@ class RecordStore:
                     out[r] = bytes(blob[o : o + ln])
 
         self._workers_map(work, extents, workers)
+        # post-execution accounting: see read_batch_into
+        self.stats.account_plan(extents)
         return out  # type: ignore[return-value]
+
+    def read_batch_ragged(
+        self,
+        indices: Sequence[int],
+        *,
+        gap_bytes: int = PAGE,
+        workers: int = 1,
+        ring: Optional["RaggedBufferRing"] = None,
+    ) -> RaggedBatch:
+        """Coalesced batch read of variable-length records into ONE arena.
+
+        The ragged analogue of :meth:`read_batch_into`: the coalescing
+        plan is computed entirely in NumPy (same cut rule as
+        :func:`plan_extents`, via the shared ``_sorted_plan`` core),
+        extents land back-to-back in a scratch buffer via GIL-releasing
+        ``preadv`` workers, and the whole batch then materializes with a
+        single vectorized gather into a dense uint8 ``arena`` packed in
+        batch order, plus ``(offsets, lengths)`` int32 arrays — one
+        allocation, zero per-record ``bytes`` objects, zero per-record
+        Python.  Works for fixed-size stores too (uniform lengths), but
+        its reason to exist is the sparse/SVM path.
+
+        Pass ``ring`` (a :class:`RaggedBufferRing`) to reuse preallocated
+        arena triples in steady state; the caller must be done with the
+        previous batch before recycling it (the pipeline's ``recycle_fn``
+        contract).
+        """
+        idx = np.asarray(indices, dtype=np.int64)
+        b = len(idx)
+        if b:
+            offs = self.offsets()[idx]
+            lens = self._lengths[idx]
+            if self.variable:
+                offs = offs + 4  # skip the u32 length prefix
+        else:
+            offs = np.empty(0, np.int64)
+            lens = np.empty(0, np.int64)
+        total = int(lens.sum())
+        if total > np.iinfo(np.int32).max:
+            raise ValueError(
+                f"ragged batch of {total} bytes exceeds the int32 arena "
+                "cap (2 GiB); split the batch"
+            )
+        if ring is not None:
+            arena, out_off, out_len = ring.acquire(total, b)
+        else:
+            arena = np.empty(total, np.uint8)
+            out_off = np.empty(b, np.int32)
+            out_len = np.empty(b, np.int32)
+        if b == 0:
+            return RaggedBatch(arena, out_off, out_len)
+        try:
+            return self._fill_ragged(
+                arena, out_off, out_len, offs, lens, total, gap_bytes, workers
+            )
+        except BaseException:
+            # hand the slot back on failure (e.g. a short pread the caller
+            # will retry) — otherwise every error drains the ring and
+            # silently disables the allocation-free steady state
+            if ring is not None:
+                ring.recycle(arena)
+            raise
+
+    def _fill_ragged(
+        self, arena, out_off, out_len, offs, lens, total, gap_bytes, workers
+    ) -> RaggedBatch:
+        b = len(lens)
+        out_len[:] = lens
+        # packed in batch order: offsets are the exclusive prefix sum
+        out_off[0] = 0
+        if b > 1:
+            out_off[1:] = np.cumsum(lens[:-1])
+
+        order, soff, slen, ends, new_ext = _sorted_plan(offs, lens, gap_bytes)
+        ext_id = np.cumsum(new_ext) - 1
+        starts = np.flatnonzero(new_ext)
+        last = np.append(starts[1:], b) - 1
+        ext_off = soff[starts]
+        ext_len = ends[last] - ext_off
+        ext_recs = np.diff(np.append(starts, b))
+        bases = np.concatenate(([0], np.cumsum(ext_len)))
+        # padded to a word boundary so the uint32 fast-path view is legal
+        scratch_bytes = int(bases[-1])
+        scratch_buf = self._acquire_scratch(-(-scratch_bytes // 4) * 4)
+        try:
+            scratch = scratch_buf[: -(-scratch_bytes // 4) * 4]
+            fd = self._fd
+
+            def work(chunk: List[int]):
+                for e in chunk:
+                    lo = int(bases[e])
+                    _pread_full(
+                        fd, scratch[lo : lo + int(ext_len[e])], int(ext_off[e])
+                    )
+
+            self._workers_map(work, list(range(len(starts))), workers)
+            # post-execution accounting: see read_batch_into
+            self.stats.account_batch(ext_off, ext_len, ext_recs)
+
+            # ONE vectorized gather scatters every record into the arena.
+            # Because the arena is packed (dest offsets are the running
+            # total), byte k of the output pulls from scratch position
+            # ``(src_row − out_off)[record(k)] + k`` — a repeat, an iota
+            # and a take.  Index math runs in int32 whenever scratch fits
+            # (4 GiB of index traffic per batch otherwise), and when every
+            # record is 4-byte aligned — true for the sparse SVM encoding,
+            # whose records are all ``8 + 8·nnz`` bytes — the gather moves
+            # uint32 *words*, 4× fewer elements than a byte gather.
+            src_row = np.empty(b, np.int64)
+            src_row[order] = bases[ext_id] + (soff - ext_off[ext_id])
+            delta = src_row - out_off  # int64; per-record (src − dst)
+            small = scratch_bytes <= np.iinfo(np.int32).max
+            aligned = (
+                small
+                and not (delta & 3).any()
+                and not (out_len & 3).any()
+            )
+            if aligned:
+                words = out_len.astype(np.int32) >> 2
+                flat = np.repeat((delta >> 2).astype(np.int32), words)
+                flat += np.arange(total >> 2, dtype=np.int32)
+                np.take(
+                    scratch.view(np.uint32), flat, out=arena.view(np.uint32)
+                )
+            else:
+                it = np.int32 if small else np.int64
+                flat = np.repeat(delta.astype(it), out_len)
+                flat += np.arange(total, dtype=it)
+                np.take(scratch, flat, out=arena)
+            return RaggedBatch(arena, out_off, out_len)
+        finally:
+            self._release_scratch(scratch_buf)
 
     def read_range(self, start: int, count: int) -> List[bytes]:
         """Sequential read of [start, start+count) records (BMF/TFIP path)."""
@@ -578,6 +800,78 @@ class BatchBufferRing:
                 b is buf for b in self._free
             ):
                 self._free.append(buf)
+
+
+class RaggedBufferRing:
+    """Preallocated ring of ragged arena triples (arena, offsets, lengths).
+
+    The variable-length sibling of :class:`BatchBufferRing`: each slot
+    owns a ``capacity_bytes`` uint8 arena plus ``batch_size`` int32
+    offset/length arrays; ``acquire(total, b)`` hands out views sliced to
+    the batch at hand.  Slot identity is tracked by the arena object, so
+    :meth:`recycle` accepts a :class:`RaggedBatch`, a bare arena (or any
+    view chain over one) and ignores foreign arrays — safe as a blanket
+    ``recycle_fn`` on an :class:`~repro.core.pipeline.InputPipeline`.
+    Batches too large for a slot fall back to fresh heap allocations
+    (counted in ``misses``) rather than blocking or failing.
+    """
+
+    def __init__(self, capacity_bytes: int, batch_size: int, depth: int = 4):
+        self.capacity_bytes = capacity_bytes
+        self.batch_size = batch_size
+        self._owned: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = [
+            (
+                np.empty(capacity_bytes, np.uint8),
+                np.empty(batch_size, np.int32),
+                np.empty(batch_size, np.int32),
+            )
+            for _ in range(depth)
+        ]
+        self._free: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = list(
+            self._owned
+        )
+        self._lock = threading.Lock()
+        self.misses = 0
+
+    def acquire(
+        self, total_bytes: int, batch: int
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Views ``(arena[:total_bytes], offsets[:batch], lengths[:batch])``
+        over a free slot, or fresh arrays when none fits."""
+        slot = None
+        with self._lock:
+            if (
+                total_bytes <= self.capacity_bytes
+                and batch <= self.batch_size
+                and self._free
+            ):
+                slot = self._free.pop()
+            else:
+                self.misses += 1
+        if slot is None:
+            return (
+                np.empty(total_bytes, np.uint8),
+                np.empty(batch, np.int32),
+                np.empty(batch, np.int32),
+            )
+        arena, off, ln = slot
+        return arena[:total_bytes], off[:batch], ln[:batch]
+
+    def recycle(self, item):
+        """Return a slot to the ring; accepts the :class:`RaggedBatch` (or
+        its arena / any view over it) handed out by ``acquire``."""
+        arena = item.arena if isinstance(item, RaggedBatch) else item
+        if isinstance(arena, tuple):  # a bare (arena, off, len) triple
+            arena = arena[0]
+        buf = arena
+        while getattr(buf, "base", None) is not None:
+            buf = buf.base
+        with self._lock:
+            for slot in self._owned:
+                if slot[0] is buf:
+                    if not any(s[0] is buf for s in self._free):
+                        self._free.append(slot)
+                    return
 
 
 def write_records(path: str, records: Iterable[bytes], record_size: Optional[int] = None) -> int:

@@ -1,1 +1,7 @@
 from repro.svm.linear import LinearSVM, svm_objective  # noqa: F401
+from repro.svm.sparse import (  # noqa: F401
+    CSRBatch,
+    csr_to_dense,
+    pack_csr_batch,
+    pad_csr,
+)

@@ -48,6 +48,67 @@ def test_batch_gather_duplicate_indices():
     np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
 
 
+# ----------------------------------------------------------------- csr_dot
+
+
+@pytest.mark.parametrize(
+    "b,k,d,block_b",
+    [(16, 8, 128, 8), (5, 24, 64, 8), (32, 16, 256, 4), (1, 8, 32, 8),
+     (33, 40, 512, 16)],
+)
+def test_csr_dot_bit_exact(b, k, d, block_b):
+    """Padded-CSR inner products must match the jnp reference bit-exactly
+    (same gather values, same reduction order), including ragged batch
+    sizes that pad the grid."""
+    idx = jnp.asarray(RNG.integers(0, d, size=(b, k)), jnp.int32)
+    val = _rand((b, k), jnp.float32)
+    # zero-pad a random suffix of each row (the pad_csr contract)
+    keep = RNG.integers(1, k + 1, size=b)
+    mask = np.arange(k)[None, :] < keep[:, None]
+    idx = jnp.where(mask, idx, 0)
+    val = jnp.where(mask, val, 0.0)
+    w = _rand((d,), jnp.float32)
+    out = ops.csr_dot(idx, val, w, block_b=block_b)
+    want = ref.csr_dot_ref(idx, val, w)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    # the MXU one-hot formulation: same values to ~1 ulp
+    mxu = ops.csr_dot(idx, val, w, block_b=block_b, gather="onehot")
+    np.testing.assert_allclose(
+        np.asarray(mxu), np.asarray(want), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_csr_dot_duplicate_features_accumulate():
+    """A row listing the same feature twice contributes twice (CSR sum)."""
+    idx = jnp.asarray([[3, 3, 0, 0]], jnp.int32)
+    val = jnp.asarray([[1.5, 2.5, 0.0, 0.0]], jnp.float32)
+    w = jnp.arange(8, dtype=jnp.float32)
+    out = ops.csr_dot(idx, val, w)
+    np.testing.assert_allclose(np.asarray(out), [4.0 * 3.0])
+
+
+def test_csr_dot_empty_batch():
+    out = ops.csr_dot(
+        jnp.zeros((0, 8), jnp.int32), jnp.zeros((0, 8), jnp.float32),
+        jnp.ones(16, jnp.float32),
+    )
+    assert out.shape == (0,)
+
+
+def test_csr_dot_matches_dense_matvec():
+    """Against a dense densification oracle (not just the gather ref)."""
+    b, k, d = 12, 10, 96
+    idx_np = np.stack([
+        RNG.choice(d, size=k, replace=False) for _ in range(b)
+    ]).astype(np.int32)
+    val_np = RNG.normal(size=(b, k)).astype(np.float32)
+    dense = np.zeros((b, d), np.float32)
+    np.put_along_axis(dense, idx_np, val_np, axis=1)
+    w = RNG.normal(size=d).astype(np.float32)
+    out = ops.csr_dot(jnp.asarray(idx_np), jnp.asarray(val_np), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out), dense @ w, rtol=2e-5, atol=2e-5)
+
+
 # --------------------------------------------------------- flash_attention
 
 

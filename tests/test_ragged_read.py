@@ -1,0 +1,430 @@
+"""Ragged arena batch engine: property-tested I/O contract.
+
+Covers: plan_extents invariants under random batches (coverage, offset
+order, gap threshold), byte-for-byte round-trip of ``read_batch_ragged``
+against the naive paths for random record-length distributions, plan
+consistency between the ragged reader and ``plan_extents``, the ragged
+buffer ring, pipeline determinism (multi- vs single-producer, dense and
+ragged, with recycling), and the IOStats retry/concurrency contract.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.core.location import LocationGenerator
+from repro.core.pipeline import InputPipeline, store_fetch_fn
+from repro.core.shuffler import LIRSShuffler
+from repro.storage import record_store
+from repro.storage.record_store import (
+    PAGE,
+    BatchBufferRing,
+    RaggedBatch,
+    RaggedBufferRing,
+    RecordStore,
+    RecordWriter,
+    plan_extents,
+)
+
+GAPS = [-1, 0, 1, 3, 4, 17, 96, PAGE]
+
+
+def _make_variable_store(path, lengths):
+    rng = np.random.default_rng(len(lengths))
+    recs = [rng.bytes(int(n)) for n in lengths]
+    with RecordWriter(path) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    LocationGenerator().generate(store)
+    return store, recs
+
+
+# ------------------------------------------------ plan_extents properties
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(1, 120),
+    gap=st.sampled_from(GAPS),
+)
+def test_plan_extents_invariants(seed, n, gap):
+    rng = np.random.default_rng(seed)
+    offsets = rng.integers(0, 6000, size=n).astype(np.int64)
+    lengths = rng.integers(0, 300, size=n).astype(np.int64)
+    exts = plan_extents(offsets, lengths, gap)
+    # 1. every requested record appears in exactly one extent slot
+    rows = np.concatenate([e.rows for e in exts])
+    assert sorted(rows.tolist()) == list(range(n))
+    # 2. extents are offset-sorted and never merge across gaps > gap
+    for a, b in zip(exts, exts[1:]):
+        assert b.offset > a.offset
+        assert b.offset - (a.offset + a.length) > gap
+    for e in exts:
+        # 3. records sit inside their extent
+        assert (e.rec_offsets >= 0).all()
+        assert (e.rec_offsets + e.rec_lengths <= e.length).all()
+        # 4. within an extent, consecutive sorted records merge legally:
+        #    each gap to the running covered end is <= gap (or an overlap)
+        ends = np.maximum.accumulate(e.rec_offsets + e.rec_lengths)
+        gaps = e.rec_offsets[1:] - ends[:-1]
+        assert (gaps <= gap).all() or len(e.rows) == 1
+        # 5. byte accounting: the extent spans exactly to its furthest record
+        assert e.length == int(ends[-1]) if len(e.rows) else True
+        # scatter targets reproduce the original batch rows' lengths
+        assert np.array_equal(np.sort(e.rows), np.unique(e.rows))
+
+
+# -------------------------------------------------- ragged round-trip
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    batch=st.integers(1, 150),
+    gap=st.sampled_from(GAPS),
+    aligned=st.sampled_from([False, True]),
+)
+def test_ragged_roundtrips_byte_for_byte(tmp_path_factory, seed, batch, gap, aligned):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 200))
+    if aligned:
+        # sparse-SVM-shaped lengths (8 + 8*nnz): exercises the word gather
+        lengths = 8 + 8 * rng.integers(0, 24, size=n)
+    else:
+        # mixture incl. zero-length and page-crossing records
+        lengths = rng.integers(0, 600, size=n)
+        lengths[rng.random(n) < 0.1] = 0
+    path = str(tmp_path_factory.mktemp("rr") / "v.rrec")
+    store, recs = _make_variable_store(path, lengths)
+    idx = rng.integers(0, n, size=batch)
+    rb = store.read_batch_ragged(idx, gap_bytes=gap)
+    want = [recs[i] for i in idx]
+    assert rb.tolist() == want
+    assert store.read_batch(idx) == want
+    # arena layout contract: packed in batch order
+    assert rb.arena.size == sum(len(r) for r in want)
+    assert np.array_equal(
+        rb.offsets, np.concatenate(([0], np.cumsum(rb.lengths[:-1])))
+    )
+    store.close()
+
+
+@pytest.mark.parametrize("workers", [1, 4, 8])
+def test_ragged_workers_byte_identical(tmp_path, workers):
+    rng = np.random.default_rng(11)
+    store, recs = _make_variable_store(
+        str(tmp_path / "w.rrec"), rng.integers(0, 300, size=300)
+    )
+    idx = rng.integers(0, 300, size=200)
+    rb = store.read_batch_ragged(idx, workers=workers)
+    assert rb.tolist() == [recs[i] for i in idx]
+    store.close()
+
+
+def test_ragged_plan_matches_plan_extents(tmp_path):
+    """Same cut rule: the ragged reader must issue exactly the extents
+    plan_extents plans, for every gap."""
+    rng = np.random.default_rng(5)
+    store, _ = _make_variable_store(
+        str(tmp_path / "p.rrec"), rng.integers(0, 250, size=400)
+    )
+    idx = rng.integers(0, 400, size=230)
+    for gap in GAPS:
+        exts = store.plan_batch(idx, gap_bytes=gap)
+        store.stats.reset()
+        store.read_batch_ragged(idx, gap_bytes=gap)
+        assert store.stats.batch_ios == len(exts)
+        assert store.stats.batch_records == len(idx)
+        assert store.stats.bytes_read == sum(e.length for e in exts)
+    store.close()
+
+
+def test_ragged_works_on_fixed_stores(tmp_path):
+    path = str(tmp_path / "f.rrec")
+    rng = np.random.default_rng(3)
+    recs = [rng.bytes(64) for _ in range(128)]
+    with RecordWriter(path, record_size=64) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    idx = rng.integers(0, 128, size=90)
+    rb = store.read_batch_ragged(idx)
+    assert rb.tolist() == [recs[i] for i in idx]
+    dense = store.read_batch_into(idx)
+    assert np.array_equal(rb.arena.reshape(len(idx), 64), dense)
+    store.close()
+
+
+def test_ragged_empty_batch(tmp_path):
+    store, _ = _make_variable_store(str(tmp_path / "e.rrec"), [5, 6, 7])
+    rb = store.read_batch_ragged([])
+    assert len(rb) == 0 and rb.arena.size == 0 and rb.tolist() == []
+    store.close()
+
+
+# --------------------------------------------------------- buffer ring
+def test_ragged_ring_reuse_and_misses(tmp_path):
+    store, recs = _make_variable_store(
+        str(tmp_path / "ring.rrec"), np.full(64, 40)
+    )
+    ring = RaggedBufferRing(capacity_bytes=40 * 32, batch_size=32, depth=2)
+    idx = np.arange(32)
+    a = store.read_batch_ragged(idx, ring=ring)
+    b = store.read_batch_ragged(idx, ring=ring)
+    assert ring.misses == 0 and len(ring._free) == 0
+    c = store.read_batch_ragged(idx, ring=ring)  # exhausted: heap fallback
+    assert ring.misses == 1
+    for item in (a, b, c):
+        assert item.tolist() == [recs[i] for i in idx]
+    ring.recycle(a)
+    ring.recycle(b)
+    ring.recycle(c)  # miss-allocated: ignored
+    assert len(ring._free) == 2
+    ring.recycle(a)  # double recycle is a no-op
+    assert len(ring._free) == 2
+    d = store.read_batch_ragged(idx, ring=ring)
+    assert d.arena.base is a.arena.base or d.arena.base is b.arena.base
+    # over-capacity batch falls back without corrupting the ring
+    big = store.read_batch_ragged(np.arange(64), ring=ring)
+    assert ring.misses == 2
+    assert big.tolist() == [recs[i] for i in range(64)]
+    ring.recycle(np.zeros(40 * 32, np.uint8))  # foreign array ignored
+    assert len(ring._free) == 1
+    store.close()
+
+
+# ------------------------------------------- pipeline determinism (ragged)
+def _epoch_blobs(pipe, shuffler, epochs):
+    out = []
+    for e in range(epochs):
+        for item in pipe.epoch(e):
+            if isinstance(item, RaggedBatch):
+                out.append(b"".join(item.tolist()))
+            else:
+                out.append(np.asarray(item).tobytes())
+    return out
+
+
+@pytest.mark.parametrize("kind", ["dense", "ragged"])
+def test_multi_producer_recycled_pipeline_is_deterministic(tmp_path, kind):
+    """Multi-producer + recycle_fn must yield bit-identical batch
+    sequences to single-producer across 3 epochs (the PR 1 credit-window
+    invariant, now for arena triples too)."""
+    n, batch = 256, 32
+    rng = np.random.default_rng(17)
+    if kind == "dense":
+        path = str(tmp_path / "d.rrec")
+        with RecordWriter(path, record_size=48) as w:
+            for _ in range(n):
+                w.append(rng.bytes(48))
+        store = RecordStore(path)
+        make_ring = lambda: BatchBufferRing(batch, 48, depth=8)
+    else:
+        path = str(tmp_path / "r.rrec")
+        with RecordWriter(path) as w:
+            for _ in range(n):
+                w.append(rng.bytes(int(rng.integers(0, 120))))
+        store = RecordStore(path)
+        LocationGenerator().generate(store)
+        make_ring = lambda: RaggedBufferRing(batch * 130, batch, depth=8)
+
+    def run(producers):
+        ring = make_ring()
+        sh = LIRSShuffler(n, batch, seed=3)
+        pipe = InputPipeline(
+            sh.epoch_batches,
+            store_fetch_fn(store, ring=ring, workers=2),
+            prefetch=3,
+            num_producers=producers,
+            recycle_fn=ring.recycle,
+        )
+        return _epoch_blobs(pipe, sh, epochs=3)
+
+    single = run(1)
+    multi = run(4)
+    assert single == multi
+    assert len(single) == 3 * (n // batch)
+    store.close()
+
+
+def test_store_fetch_fn_modes(tmp_path):
+    path = str(tmp_path / "m.rrec")
+    with RecordWriter(path, record_size=16) as w:
+        for i in range(8):
+            w.append(bytes([i]) * 16)
+    fixed = RecordStore(path)
+    vstore, _ = _make_variable_store(str(tmp_path / "mv.rrec"), [3, 9, 1])
+    # auto picks the right engine
+    assert isinstance(store_fetch_fn(fixed)(np.array([0, 1])), np.ndarray)
+    assert isinstance(store_fetch_fn(vstore)(np.array([0, 1])), RaggedBatch)
+    with pytest.raises(ValueError, match="dense mode"):
+        store_fetch_fn(vstore, mode="dense")
+    with pytest.raises(TypeError, match="RaggedBufferRing"):
+        store_fetch_fn(vstore, mode="ragged", ring=BatchBufferRing(2, 16))
+    with pytest.raises(TypeError, match="BatchBufferRing"):
+        store_fetch_fn(fixed, mode="dense", ring=RaggedBufferRing(64, 2))
+    with pytest.raises(ValueError, match="auto"):
+        store_fetch_fn(fixed, mode="bogus")
+    fixed.close()
+    vstore.close()
+
+
+def test_failed_batch_returns_ring_slot(tmp_path, monkeypatch):
+    """An extent read that raises must hand the ring slot back — errors
+    must not drain the ring into permanent heap-miss mode."""
+    store, recs = _make_variable_store(
+        str(tmp_path / "leak.rrec"), np.full(32, 24)
+    )
+    ring = RaggedBufferRing(capacity_bytes=24 * 32, batch_size=32, depth=2)
+    idx = np.arange(32)
+
+    def boom(fd, buf, offset):
+        raise IOError("short read at 0: EOF")
+
+    monkeypatch.setattr(record_store, "_pread_full", boom)
+    for _ in range(3):  # more failures than ring depth
+        with pytest.raises(IOError):
+            store.read_batch_ragged(idx, ring=ring)
+    assert len(ring._free) == 2 and ring.misses == 0
+    monkeypatch.undo()
+    rb = store.read_batch_ragged(idx, ring=ring)  # retry reuses a slot
+    assert rb.tolist() == [recs[i] for i in idx]
+    assert ring.misses == 0
+    store.close()
+
+
+# ----------------------------------------------- IOStats retry contract
+@pytest.mark.parametrize("method", ["into", "coalesced", "ragged"])
+def test_retried_batch_after_short_pread_accounts_once(
+    tmp_path, monkeypatch, method
+):
+    """A batch that dies on a short pread and is retried by the caller
+    must charge IOStats exactly once — the failed attempt's extents are
+    not accounted (the records_per_io double-count regression)."""
+    path = str(tmp_path / "retry.rrec")
+    rng = np.random.default_rng(2)
+    recs = [rng.bytes(64) for _ in range(64)]
+    with RecordWriter(path, record_size=64) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    if method == "coalesced":
+        LocationGenerator().generate(store)
+    idx = np.arange(0, 64, 2)
+
+    real = record_store._pread_full
+    state = {"fail": 1}
+
+    def flaky(fd, buf, offset):
+        if state["fail"]:
+            state["fail"] -= 1
+            raise IOError(f"short read at {offset}: EOF")
+        return real(fd, buf, offset)
+
+    monkeypatch.setattr(record_store, "_pread_full", flaky)
+    call = {
+        "into": lambda: store.read_batch_into(idx, gap_bytes=0),
+        "coalesced": lambda: store.read_batch_coalesced(idx, gap_bytes=0),
+        "ragged": lambda: store.read_batch_ragged(idx, gap_bytes=0),
+    }[method]
+    store.stats.reset()
+    with pytest.raises(IOError, match="short read"):
+        call()
+    assert store.stats.batch_ios == 0
+    assert store.stats.batch_records == 0
+    result = call()  # the caller's retry
+    assert store.stats.batch_records == len(idx)
+    assert store.stats.records_per_io == 1.0  # stride-2, gap 0: no merges
+    if method == "into":
+        assert [bytes(r) for r in result] == [recs[i] for i in idx]
+    elif method == "coalesced":
+        assert result == [recs[i] for i in idx]
+    else:
+        assert result.tolist() == [recs[i] for i in idx]
+    store.close()
+
+
+def test_records_per_io_consistent_under_concurrent_readers(tmp_path):
+    """8 threads hammering the batch paths concurrently: the coalescing
+    counters must add up exactly (no lost or double-counted extents)."""
+    path = str(tmp_path / "stress.rrec")
+    rng = np.random.default_rng(4)
+    with RecordWriter(path, record_size=32) as w:
+        for _ in range(512):
+            w.append(rng.bytes(32))
+    store = RecordStore(path)
+    T, REPS, B, GAP = 8, 20, 64, 64
+    batches = [
+        np.random.default_rng(t).integers(0, 512, size=B) for t in range(T)
+    ]
+    # deterministic per-batch expectation, computed single-threaded
+    expect_ios = 0
+    for idx in batches:
+        expect_ios += len(store.plan_batch(idx, gap_bytes=GAP))
+    store.stats.reset()
+    errs = []
+
+    def hammer(t):
+        try:
+            for r in range(REPS):
+                if (t + r) % 2:
+                    store.read_batch_into(batches[t], gap_bytes=GAP)
+                else:
+                    store.read_batch_ragged(batches[t], gap_bytes=GAP)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(T)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs
+    assert store.stats.batch_records == T * REPS * B
+    assert store.stats.batch_ios == REPS * expect_ios
+    assert store.stats.records_per_io == pytest.approx(
+        T * REPS * B / (REPS * expect_ios)
+    )
+    store.close()
+
+
+# ------------------------------------------------- cost model (ragged)
+def test_ragged_coalescing_model_tracks_measurement(tmp_path):
+    from repro.core.shuffler import expected_ragged_coalescing_factor
+
+    rng = np.random.default_rng(9)
+    n, b = 16384, 2048
+    lengths = 8 + 8 * rng.integers(2, 14, size=n)  # mean ~72 B, variable
+    store, _ = _make_variable_store(str(tmp_path / "cm.rrec"), lengths)
+    mean = float(lengths.mean())
+    gap = PAGE
+    idx = rng.permutation(n)[:b]
+    store.stats.reset()
+    store.read_batch_ragged(idx, gap_bytes=gap)
+    measured = store.stats.records_per_io
+    model = expected_ragged_coalescing_factor(n, b, gap, mean)
+    assert measured > 1.5
+    assert abs(model - measured) / measured < 0.3
+    store.close()
+
+
+def test_storage_model_prices_ragged_epoch():
+    from repro.storage.devices import HDD, OPTANE
+
+    sh = LIRSShuffler(65536, 4096, avg_instance_bytes=72.0)
+    plan = sh.io_plan(
+        65536 * 72.0, is_sparse=True, coalesce_gap=4 * PAGE, queue_depth=8
+    )
+    assert plan.mean_record_bytes == 72.0
+    assert plan.coalescing_factor > 5
+    # sparse pre-processing = one sequential scan, priced on the device
+    assert OPTANE.t_preprocess(plan) == OPTANE.t_seq_read(65536 * 72.0)
+    # coalescing + queue depth must beat the uncoalesced epoch on NVM
+    base = sh.io_plan(65536 * 72.0, is_sparse=True)
+    assert OPTANE.t_epoch_read(plan) < OPTANE.t_epoch_read(base)
+    # Eq. 1 storage term: preprocess amortizes over epochs
+    assert OPTANE.t_total(plan, 10) == pytest.approx(
+        OPTANE.t_preprocess(plan) + 10 * OPTANE.t_epoch_read(plan)
+    )
+    # HDD cannot exploit queue depth (max_queue_depth == 1)
+    hdd_qd = sh.io_plan(65536 * 72.0, is_sparse=True, queue_depth=8)
+    assert HDD.t_epoch_read(hdd_qd) == HDD.t_epoch_read(base)
