@@ -1,0 +1,227 @@
+"""prefetch — the tiered read path: clairvoyant prefetch + DRAM cache.
+
+Because LIRS permutes *indexes*, the whole epoch's storage order is known
+before the first read; this benchmark measures what the
+``repro.prefetch`` subsystem buys when it exploits that:
+
+* **hit-rate sweep** — steady-state DRAM-tier hit rate at several cache
+  budgets (fractions of the dataset), measured at window-admission time
+  (= storage reads avoided), against ``IOPlan.cache_hit_fraction``'s
+  LRU-under-permutation closed form ``c + (1−c)·ln(1−c)``.  Full-range
+  shuffling is adversarial for recency, so partial budgets hit far below
+  ``c`` — the model has to track the measured curve, not ``budget/total``.
+* **cold vs warm epoch throughput** — consumer-side wall time of one
+  epoch through the ``InputPipeline``: the cold coalesced path
+  (``store_fetch_fn``, every batch read from storage on demand) vs the
+  warm tiered path (``PrefetchingFetcher`` after a warm-up epoch:
+  resident records gathered from DRAM, misses prefetched ahead of demand
+  by the background worker through the same pread pool).  The headline
+  acceptance number is the warm/cold speedup at the full-coverage budget
+  (any budget ≥ 25% of the dataset qualifies; the sweep shows where the
+  crossover happens).  To be explicit about what partial budgets can
+  show *on this box*: the benchmark file sits in the OS page cache and
+  the consumer does zero compute, so direct "storage" reads are already
+  memcpy-speed and a tier that still has to read ``(1−hit)·N`` records
+  (plus one insert + one gather copy) cannot beat them — partial-budget
+  sweep points honestly land below 1×.  Their value is the *avoided
+  device I/O* on real storage, which ``modeled_epoch_read_s`` prices per
+  Table 2 device via ``IOPlan.cache_hit_fraction``; the crossover to
+  wall-clock wins happens once residency beats the copy overhead (full
+  coverage here: demand becomes pure DRAM gather, 3-4×).
+* **determinism spot-check** — first warm batch byte-identical to the
+  cold path's.
+
+Emits JSON to benchmarks/results/prefetch.json and harness CSV rows.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import cached
+from repro.core.pipeline import InputPipeline, store_fetch_fn
+from repro.core.shuffler import LIRSShuffler
+from repro.prefetch.fetcher import PrefetchingFetcher
+from repro.storage.devices import STORAGE_MODELS
+from repro.storage.record_store import PAGE, RecordStore, RecordWriter
+
+N_RECORDS = 32_768
+RECORD_BYTES = 256
+BATCH = 1024
+WORKERS = 4
+LOOKAHEAD = 8
+GAP = 4 * PAGE
+BUDGET_FRACS = [0.1, 0.25, 0.5, 1.0]
+WARM_EPOCHS = 3   # measured epochs after the warm-up epoch
+ACCEPT_MIN_BUDGET = 0.25
+
+
+def _epoch_seconds(pipe: InputPipeline, epoch: int) -> float:
+    t0 = time.perf_counter()
+    for _ in pipe.epoch(epoch):
+        pass
+    return time.perf_counter() - t0
+
+
+def run(force: bool = False):
+    def compute():
+        tmp = tempfile.mkdtemp()
+        path = f"{tmp}/prefetch.rrec"
+        rng = np.random.default_rng(0)
+        with RecordWriter(path, record_size=RECORD_BYTES) as w:
+            payload = rng.integers(
+                0, 256, size=(N_RECORDS, RECORD_BYTES), dtype=np.uint8
+            )
+            for i in range(N_RECORDS):
+                w.append(payload[i].tobytes())
+        store = RecordStore(path)
+        total_bytes = float(N_RECORDS * RECORD_BYTES)
+        sh = LIRSShuffler(
+            N_RECORDS, BATCH, seed=1, avg_instance_bytes=RECORD_BYTES
+        )
+
+        # ---- cold baseline: coalesced demand reads, no DRAM tier
+        cold_fetch = store_fetch_fn(store, gap_bytes=GAP, workers=WORKERS)
+        cold_pipe = InputPipeline(
+            lambda e: sh.epoch_batches(e), cold_fetch, prefetch=2
+        )
+        cold_s = min(_epoch_seconds(cold_pipe, e) for e in range(WARM_EPOCHS))
+        first_idx = next(sh.epoch_batches(0))
+        cold_first = bytes(cold_fetch(first_idx).reshape(-1))
+
+        out = {
+            "num_records": N_RECORDS,
+            "record_bytes": RECORD_BYTES,
+            "batch": BATCH,
+            "workers": WORKERS,
+            "lookahead": LOOKAHEAD,
+            "gap_bytes": GAP,
+            "cold_epoch_s": cold_s,
+            "cold_records_per_s": N_RECORDS / cold_s,
+            "budgets": {},
+        }
+
+        for frac in BUDGET_FRACS:
+            budget = int(frac * total_bytes)
+            fetcher = PrefetchingFetcher(
+                store,
+                sh,
+                budget_bytes=budget,
+                lookahead=LOOKAHEAD,
+                gap_bytes=GAP,
+                workers=WORKERS,
+            )
+            pipe = InputPipeline(fetcher.batch_iter, fetcher, prefetch=2)
+            _epoch_seconds(pipe, 0)  # warm-up epoch: populate the tier
+            fetcher.drain()
+            sched = fetcher.scheduler
+            p0, a0 = sched.planned_records, sched.admitted_records
+            store.stats.reset()
+            warm_s = min(
+                _epoch_seconds(pipe, e) for e in range(1, 1 + WARM_EPOCHS)
+            )
+            # avoided-storage-reads rate over the measured epochs (window
+            # dedups count as hits; their one read charges the first use)
+            measured_hit = 1.0 - (sched.planned_records - p0) / max(
+                1, sched.admitted_records - a0
+            )
+            window_records = sched.window_records
+            storage_records = store.stats.batch_records  # pre-probe snapshot
+            plan = sh.io_plan(
+                total_bytes,
+                is_sparse=False,
+                coalesce_gap=GAP,
+                queue_depth=WORKERS,
+                cache_budget_bytes=budget,
+                prefetch_window_bytes=window_records * RECORD_BYTES,
+            )
+            # determinism spot-check against the cold path (after the
+            # timing and the stats snapshot: the out-of-stream probe
+            # batch issues its own demand reads)
+            warm_first = bytes(fetcher(first_idx).reshape(-1))
+            fetcher.close()
+            out["budgets"][f"{frac:.2f}"] = {
+                "budget_bytes": budget,
+                "warm_epoch_s": warm_s,
+                "warm_records_per_s": N_RECORDS / warm_s,
+                "warm_speedup_vs_cold": cold_s / warm_s,
+                "window_records": window_records,
+                "measured_hit_rate": measured_hit,
+                "model_hit_rate": plan.cache_hit_fraction,
+                "hit_rate_abs_err": abs(measured_hit - plan.cache_hit_fraction),
+                "storage_records_per_epoch": storage_records / WARM_EPOCHS,
+                "demand_cache_hits": fetcher.cache.hits,
+                "prefetched_records": fetcher.prefetch_records,
+                "batches_identical_to_cold": warm_first == cold_first,
+                "modeled_epoch_read_s": {
+                    name: dev.t_epoch_read(plan)
+                    for name, dev in STORAGE_MODELS.items()
+                },
+            }
+
+        # acceptance headline: best warm speedup among budgets covering
+        # >= 25% of the dataset (the sweep shows the full curve)
+        eligible = {
+            f: e
+            for f, e in out["budgets"].items()
+            if float(f) >= ACCEPT_MIN_BUDGET
+        }
+        best = max(eligible.values(), key=lambda e: e["warm_speedup_vs_cold"])
+        out["headline"] = {
+            "warm_speedup_vs_cold": best["warm_speedup_vs_cold"],
+            "at_budget_bytes": best["budget_bytes"],
+            "at_budget_fraction": best["budget_bytes"] / total_bytes,
+            "measured_hit_rate": best["measured_hit_rate"],
+            "model_hit_rate": best["model_hit_rate"],
+            "deterministic": all(
+                e["batches_identical_to_cold"]
+                for e in out["budgets"].values()
+            ),
+        }
+        store.close()
+        return out
+
+    return cached("prefetch", compute, force)
+
+
+def rows():
+    res = run()
+    out = [
+        (
+            "prefetch/cold",
+            1e6 / res["cold_records_per_s"],
+            f"{res['cold_records_per_s']:,.0f} rec/s coalesced demand reads",
+        )
+    ]
+    for frac, e in res["budgets"].items():
+        out.append(
+            (
+                f"prefetch/warm_budget{frac}",
+                1e6 / e["warm_records_per_s"],
+                f"{e['warm_records_per_s']:,.0f} rec/s "
+                f"x{e['warm_speedup_vs_cold']:.1f} vs cold "
+                f"hit={e['measured_hit_rate']:.3f} "
+                f"(model {e['model_hit_rate']:.3f}) "
+                f"identical={e['batches_identical_to_cold']}",
+            )
+        )
+    h = res["headline"]
+    out.append(
+        (
+            "prefetch/headline",
+            1e6 / res["cold_records_per_s"] / h["warm_speedup_vs_cold"],
+            f"x{h['warm_speedup_vs_cold']:.1f} warm vs cold at "
+            f"{h['at_budget_fraction']:.0%} budget, "
+            f"hit {h['measured_hit_rate']:.3f} vs model "
+            f"{h['model_hit_rate']:.3f}, deterministic={h['deterministic']}",
+        )
+    )
+    return out
+
+
+if __name__ == "__main__":
+    run(force=True)
+    for r in rows():
+        print(",".join(map(str, r)))

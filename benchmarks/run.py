@@ -22,6 +22,7 @@ def main() -> None:
         memory_overhead,
         page_aware,
         pipeline_throughput,
+        prefetch,
         queue_size,
         ragged_read,
         roofline,
@@ -39,6 +40,7 @@ def main() -> None:
         "pipeline_throughput": pipeline_throughput,
         "batch_read": batch_read,               # coalesced multi-queue engine
         "ragged_read": ragged_read,             # ragged arena engine (sparse)
+        "prefetch": prefetch,                   # clairvoyant prefetch + DRAM tier
         "roofline": roofline,                   # §Roofline (from dry-run)
     }
     if args.only:

@@ -254,6 +254,11 @@ def store_fetch_fn(
     ring: Optional[Any] = None,
     gap_bytes: int = PAGE,
     workers: int = 1,
+    shuffler: Any = None,
+    cache_budget_bytes: int = 0,
+    lookahead: int = 8,
+    prefetch_background: bool = True,
+    max_epochs: Optional[int] = None,
 ) -> Callable[[np.ndarray], Any]:
     """Build an :class:`InputPipeline` ``fetch_fn`` over a record store.
 
@@ -266,10 +271,37 @@ def store_fetch_fn(
     picks ragged for variable-length stores and dense otherwise — the one
     decision point where the two hot paths diverge.
 
+    ``cache_budget_bytes`` > 0 (with a ``shuffler``) selects the tiered
+    read path instead: a
+    :class:`~repro.prefetch.fetcher.PrefetchingFetcher` serving resident
+    records from a byte-budgeted DRAM cache and prefetching future
+    batches along the shuffler's known index stream.  The returned
+    object is still a plain ``fetch_fn`` (batch bytes are identical with
+    the tier on or off); additionally pass its ``batch_iter`` as the
+    pipeline's ``batch_iter_fn`` so the lookahead window re-syncs at
+    epoch boundaries.
+
     Pair with ``InputPipeline(recycle_fn=ring.recycle)`` for the
     allocation-free steady state; both ring classes ignore foreign arrays,
     so the blanket recycle is safe even for miss-allocated batches.
     """
+    if cache_budget_bytes:
+        if shuffler is None:
+            raise ValueError("the tiered read path needs shuffler=")
+        from repro.prefetch.fetcher import PrefetchingFetcher
+
+        return PrefetchingFetcher(
+            store,
+            shuffler,
+            budget_bytes=cache_budget_bytes,
+            lookahead=lookahead,
+            mode=mode,
+            ring=ring,
+            gap_bytes=gap_bytes,
+            workers=workers,
+            background=prefetch_background,
+            max_epochs=max_epochs,
+        )
     if mode == "auto":
         mode = "ragged" if store.variable else "dense"
     if mode == "dense":

@@ -19,6 +19,7 @@ TFIPShuffler   TensorFlow input pipeline: sequential reads through a
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Iterator, List, Optional, Sequence
 
 import numpy as np
@@ -41,6 +42,13 @@ class IOPlan:
     so the same geometric coalescing model prices non-uniform extents.
     ``StorageModel.t_epoch_read`` / ``t_preprocess`` consume a plan
     directly.
+
+    ``cache_hit_fraction`` models a DRAM tier above the device (the
+    clairvoyant prefetch subsystem, ``repro.prefetch``): the fraction of
+    an epoch's records served from memory instead of storage.  The
+    random-read fields stay *cache-less* epoch totals — the device model
+    scales both the issued I/Os and the bytes by ``1 − cache_hit_fraction``
+    when pricing, so one plan prices any budget by overriding the field.
     """
 
     preprocess_seq_read_bytes: float = 0.0
@@ -52,6 +60,7 @@ class IOPlan:
     coalescing_factor: float = 1.0
     queue_depth: float = 1.0
     mean_record_bytes: float = 0.0
+    cache_hit_fraction: float = 0.0
 
 
 def expected_coalescing_factor(
@@ -147,22 +156,75 @@ class LIRSShuffler:
         if batch:
             yield np.concatenate(batch)
 
+    def epoch_index_stream(self, epoch: int) -> np.ndarray:
+        """The epoch's full record access sequence, known up front.
+
+        Equals ``np.concatenate(list(epoch_batches(epoch)))`` — the
+        clairvoyance the prefetch subsystem exploits: because LIRS
+        permutes *indexes*, the entire storage order of an epoch (and of
+        every future epoch) exists before the first read is issued.
+        """
+        if not self.page_aware:
+            return self.assignment.epoch_permutation(epoch)
+        order = self.assignment.epoch_permutation(epoch)
+        return np.concatenate([self.page_groups[int(g)] for g in order])
+
     def io_plan(
         self,
         total_bytes: float,
         is_sparse: bool,
         coalesce_gap: float = 0.0,
         queue_depth: float = 1.0,
+        cache_budget_bytes: float = 0.0,
+        prefetch_window_bytes: float = 0.0,
     ) -> IOPlan:
         """Price an epoch.  ``coalesce_gap`` (bytes) and ``queue_depth``
         describe the batch-materialization engine: gap-merging shrinks the
         number of issued random I/Os by the expected coalescing factor,
         and queue depth is forwarded for the device models' concurrency
-        scaling (``StorageModel.t_rand_read``)."""
+        scaling (``StorageModel.t_rand_read``).
+
+        ``cache_budget_bytes`` models the DRAM tier (``repro.prefetch``):
+        an LRU record cache of capacity fraction ``c = budget / total``
+        under LIRS's per-epoch uniform permutation.  Every record is
+        reused exactly once per epoch, so a record last touched at epoch
+        position ``q`` and reused at position ``p`` of the next epoch
+        sees ``(n−q) + p·q/n`` distinct records in between (the head of
+        the new permutation overlaps the old tail); it survives LRU iff
+        that is under capacity.  Integrating over uniform ``q, p`` gives
+
+            hit(c) = c + (1 − c)·ln(1 − c)        (→ 1 as c → 1)
+
+        — far below ``c`` for small budgets (the classic LRU scanning
+        pathology: full-range shuffling is adversarial for recency), and
+        exactly what the ``LRUPageCache`` simulator at record granularity
+        and the prefetch benchmark measure.  ``prefetch_window_bytes``
+        is the prefetcher's in-flight working set (pinned lookahead
+        records): it occupies budget without contributing recency hits
+        (admission sees a record *before* its prefetch lands), so LRU
+        retention is the leftover population competing for the leftover
+        slots — ``c = (budget − window) / (total − window)``, which
+        correctly reaches 1 at full coverage, where nothing is ever
+        evicted and pins cost nothing.  The
+        *miss* sub-batch is what the batch engine coalesces, so the
+        coalescing factor is evaluated at the effective batch size
+        ``batch · (1 − hit)``; the device model then scales issued I/Os
+        and bytes by the miss fraction.
+        """
         plan = IOPlan()
         plan.mean_record_bytes = self.avg_instance_bytes
         if is_sparse:  # offset-table scan (Fig 7b)
             plan.preprocess_seq_read_bytes = total_bytes
+        hit = 0.0
+        if cache_budget_bytes > 0 and total_bytes > 0:
+            w = min(prefetch_window_bytes, cache_budget_bytes, total_bytes)
+            c = min(
+                1.0,
+                max(0.0, cache_budget_bytes - w)
+                / max(1.0, total_bytes - w),
+            )
+            hit = 1.0 if c >= 1.0 else c + (1.0 - c) * math.log1p(-c)
+        plan.cache_hit_fraction = hit
         if self.page_aware:
             n_ios = len(self.page_groups)
         else:
@@ -172,7 +234,7 @@ class LIRSShuffler:
             # gap is priced in units of the mean record size
             plan.coalescing_factor = expected_ragged_coalescing_factor(
                 self.num_items,
-                self.batch_size,
+                max(1.0, self.batch_size * (1.0 - hit)),
                 coalesce_gap,
                 self.avg_instance_bytes,
             )
@@ -199,6 +261,10 @@ class BMFShuffler:
             # block contents are physically contiguous after pre-processing:
             # reading one is a sequential scan
             yield self.blocks[int(bi)]
+
+    def epoch_index_stream(self, epoch: int) -> np.ndarray:
+        """Full epoch access sequence (= concatenated block batches)."""
+        return np.concatenate(list(self.epoch_batches(epoch)))
 
     def io_plan(self, total_bytes: float, is_sparse: bool) -> IOPlan:
         return IOPlan(
@@ -242,6 +308,10 @@ class TFIPShuffler:
         order = self.epoch_order(epoch)
         for i in range(0, self.num_items, self.batch_size):
             yield order[i : i + self.batch_size]
+
+    def epoch_index_stream(self, epoch: int) -> np.ndarray:
+        """Full epoch access sequence (the streaming-window shuffle order)."""
+        return self.epoch_order(epoch)
 
     def queue_nbytes(self, instance_bytes: float) -> float:
         """Host memory the shuffle queue occupies (paper §3.2: 7.3 GB)."""

@@ -46,6 +46,10 @@ def build_argparser():
                     help="reader threads for coalesced batch reads (queue depth)")
     ap.add_argument("--io-producers", type=int, default=1,
                     help="pipeline producer threads (ordered reassembly)")
+    ap.add_argument("--cache-mb", type=float, default=0.0,
+                    help="DRAM tier budget in MiB (0 = no tiered read path)")
+    ap.add_argument("--prefetch-lookahead", type=int, default=8,
+                    help="batches the clairvoyant prefetcher plans ahead")
     return ap
 
 
@@ -68,7 +72,37 @@ def main(argv=None):
         store = RecordStore(meta.path)
         seq = args.seq_len
 
-    if store.variable:
+    shuffler = make_shuffler(
+        args.shuffler, store.num_records, args.batch, seed=args.seed,
+        **({"page_groups": store.page_groups()} if args.shuffler == "lirs_page" else {}),
+    )
+
+    fetcher = None
+    batch_iter_fn = None
+    if args.cache_mb > 0:
+        # tiered read path: DRAM cache + clairvoyant prefetch along the
+        # shuffler's known index stream (batch bytes unchanged).
+        # max_epochs stops the lookahead from prefetching past the last
+        # epoch (reads nobody would consume, stalling shutdown)
+        from repro.core.pipeline import store_fetch_fn
+
+        fetcher = store_fetch_fn(
+            store,
+            shuffler=shuffler,
+            cache_budget_bytes=int(args.cache_mb * 2**20),
+            lookahead=args.prefetch_lookahead,
+            workers=args.io_workers,
+            max_epochs=args.epochs,
+        )
+        batch_iter_fn = fetcher.batch_iter
+
+        if store.variable:
+            def fetch(idx):
+                return decode_token_batch(fetcher(idx).tolist(), seq)
+        else:
+            def fetch(idx):
+                return decode_token_batch(fetcher(idx), seq)
+    elif store.variable:
         def fetch(idx):
             return decode_token_batch(
                 store.read_batch_coalesced(idx, workers=args.io_workers), seq
@@ -80,10 +114,6 @@ def main(argv=None):
                 store.read_batch_into(idx, workers=args.io_workers), seq
             )
 
-    shuffler = make_shuffler(
-        args.shuffler, store.num_records, args.batch, seed=args.seed,
-        **({"page_groups": store.page_groups()} if args.shuffler == "lirs_page" else {}),
-    )
     trainer = Trainer(
         cfg,
         fetch,
@@ -94,10 +124,21 @@ def main(argv=None):
         ),
         opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=10),
         num_producers=args.io_producers,
+        batch_iter_fn=batch_iter_fn,
     )
     if args.resume and trainer.try_resume():
         print(f"resumed at step {trainer.global_step}")
     summary = trainer.train()
+    if fetcher is not None:
+        fetcher.close()
+        summary["cache"] = {
+            "budget_bytes": fetcher.cache.budget_bytes,
+            "used_bytes": fetcher.cache.used_bytes,
+            "demand_hits": fetcher.cache.hits,
+            "demand_misses": fetcher.cache.misses,
+            "window_hits": fetcher.scheduler.window_hits,
+            "prefetched_records": fetcher.prefetch_records,
+        }
     print(json.dumps(summary, indent=1))
     return summary
 

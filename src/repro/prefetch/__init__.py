@@ -1,0 +1,35 @@
+"""Clairvoyant prefetch + tiered DRAM cache over the record store.
+
+LIRS shuffles *indexes*, not data: the entire per-epoch storage access
+sequence is known before the first batch is read.  This package exploits
+that clairvoyance (Dryden et al., "Clairvoyant Prefetching for
+Distributed Machine Learning I/O") as a new layer between shuffling and
+storage:
+
+* :class:`~repro.prefetch.cache.TieredCache` — a byte-budgeted DRAM tier
+  holding record payloads in a slot arena, served and filled with
+  vectorized gathers (no per-record Python), evicted LRU-by-batch with
+  known-reuse pinning: records that reappear within the lookahead window
+  are never evicted.
+* :class:`~repro.prefetch.scheduler.LookaheadScheduler` — walks the
+  shuffler's future index stream N batches ahead (across epoch
+  boundaries) and emits deduplicated prefetch plans: a record already
+  resident or already planned inside the window is never fetched twice.
+* :class:`~repro.prefetch.fetcher.PrefetchingFetcher` — an
+  ``InputPipeline`` ``fetch_fn`` drop-in (dense and ragged) whose
+  background worker executes plans through the store's GIL-releasing
+  pread pool, so storage reads run ahead of demand while the demand path
+  serves resident records at DRAM speed.  Batch bytes are identical with
+  prefetch on or off, for any producer count.
+"""
+from repro.prefetch.cache import TieredCache, copy_records
+from repro.prefetch.fetcher import PrefetchingFetcher
+from repro.prefetch.scheduler import LookaheadScheduler, PrefetchPlan
+
+__all__ = [
+    "TieredCache",
+    "copy_records",
+    "LookaheadScheduler",
+    "PrefetchPlan",
+    "PrefetchingFetcher",
+]

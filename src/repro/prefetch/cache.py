@@ -1,0 +1,236 @@
+"""Byte-budgeted DRAM record cache (the tier above NVM).
+
+The cache is a *slot arena*: ``capacity`` fixed-width slots in one
+preallocated uint8 matrix, where slot width is the store's largest record
+payload.  ``capacity * slot_bytes`` never exceeds the byte budget, so the
+budget bounds resident bytes by construction.  All bookkeeping is NumPy
+arrays indexed by record id — residency, LRU ticks, pin counts — so a
+4096-record batch is served, filled, or evicted with a handful of
+vectorized passes and zero per-record Python, matching the batch
+engines' performance discipline (a dict-of-bytes cache would hand the
+per-record cost the arena engines eliminated right back).
+
+Eviction is LRU **by batch**: every gather/insert advances one logical
+tick shared by all records it touched, and eviction takes the unpinned
+residents with the smallest tick.  Pinning is how the clairvoyant
+scheduler injects known reuse distance: records inside the lookahead
+window (i.e. about to be used) carry a pin count and are never evicted,
+no matter how stale their tick.
+
+Thread safety: one lock around every public method.  Gathers copy out
+under the lock, so a concurrent insert/evict can never recycle a slot
+mid-copy.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+
+def copy_records(
+    src: np.ndarray,
+    src_off: np.ndarray,
+    dst: np.ndarray,
+    dst_off: np.ndarray,
+    lens: np.ndarray,
+):
+    """Vectorized multi-record memcpy between flat uint8 buffers:
+    ``dst[dst_off[i] : dst_off[i]+lens[i]] = src[src_off[i] : ...]`` for
+    every record ``i`` — one repeat/iota pass, no per-record Python."""
+    lens = np.asarray(lens, np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return
+    starts = np.concatenate(([0], np.cumsum(lens[:-1])))
+    within = np.arange(total, dtype=np.int64) - np.repeat(starts, lens)
+    dst[np.repeat(np.asarray(dst_off, np.int64), lens) + within] = src[
+        np.repeat(np.asarray(src_off, np.int64), lens) + within
+    ]
+
+
+class TieredCache:
+    """DRAM tier over a :class:`~repro.storage.record_store.RecordStore`.
+
+    ``record_lengths`` are the store's per-record *payload* lengths
+    (``store.lengths()``); they fix each record's slot usage and let both
+    sides agree on byte counts.  ``budget_bytes`` caps the arena:
+    ``nbytes <= budget_bytes`` always, and a budget smaller than one slot
+    degenerates to a 0-capacity cache that misses everything (still
+    byte-identical behaviour, just no hits).
+    """
+
+    def __init__(
+        self,
+        record_lengths: np.ndarray,
+        budget_bytes: int,
+        slot_bytes: Optional[int] = None,
+    ):
+        lengths = np.asarray(record_lengths, np.int64)
+        self.record_lengths = lengths
+        n = len(lengths)
+        if slot_bytes is None:
+            slot_bytes = int(lengths.max()) if n else 1
+        self.slot_bytes = max(1, int(slot_bytes))
+        self.budget_bytes = int(budget_bytes)
+        self.capacity = max(0, self.budget_bytes // self.slot_bytes)
+        self._arena = np.empty(self.capacity * self.slot_bytes, np.uint8)
+        self._slot_of = np.full(n, -1, np.int64)   # record id -> slot (-1 absent)
+        self._id_of = np.full(self.capacity, -1, np.int64)  # slot -> record id
+        self._free = list(range(self.capacity))
+        self._pin = np.zeros(n, np.int32)
+        self._last_used = np.zeros(n, np.int64)
+        self._tick = 0
+        self._used_bytes = 0
+        self._lock = threading.Lock()
+        # gather-level counters (records served / missed at demand time)
+        self.hits = 0
+        self.misses = 0
+        self.hit_bytes = 0
+        self.insertions = 0
+        self.evictions = 0
+        self.rejected = 0  # inserts dropped because every victim was pinned
+
+    # ---------------------------------------------------------- introspect
+    @property
+    def nbytes(self) -> int:
+        """Allocated arena bytes (≤ ``budget_bytes`` by construction)."""
+        return self._arena.nbytes
+
+    @property
+    def used_bytes(self) -> int:
+        """Payload bytes currently resident (≤ ``budget_bytes``)."""
+        with self._lock:
+            return self._used_bytes
+
+    @property
+    def resident_count(self) -> int:
+        return self.capacity - len(self._free)
+
+    def resident(self, ids: np.ndarray) -> np.ndarray:
+        """Boolean mask: which of ``ids`` are currently cached."""
+        ids = np.asarray(ids, np.int64)
+        with self._lock:
+            return self._slot_of[ids] >= 0
+
+    # --------------------------------------------------------------- pins
+    def pin(self, ids: np.ndarray):
+        """Raise the pin count of ``ids`` (the scheduler's lookahead
+        window membership); pinned records are never evicted."""
+        with self._lock:
+            np.add.at(self._pin, np.asarray(ids, np.int64), 1)
+
+    def unpin(self, ids: np.ndarray):
+        with self._lock:
+            ids = np.asarray(ids, np.int64)
+            np.add.at(self._pin, ids, -1)
+            np.maximum(self._pin, 0, out=self._pin)  # tolerate stray unpins
+
+    def pinned(self, ids: np.ndarray) -> np.ndarray:
+        with self._lock:
+            return self._pin[np.asarray(ids, np.int64)] > 0
+
+    # ------------------------------------------------------------- gather
+    def gather(
+        self, ids: np.ndarray, dst: np.ndarray, dst_off: np.ndarray
+    ) -> np.ndarray:
+        """Serve cached records into a flat uint8 destination.
+
+        ``dst[dst_off[i] : dst_off[i] + record_lengths[ids[i]]]`` receives
+        record ``ids[i]``'s payload for every hit; returns the boolean hit
+        mask.  Copies happen under the cache lock, so concurrent
+        insert/evict cannot recycle a slot mid-copy.
+        """
+        ids = np.asarray(ids, np.int64)
+        with self._lock:
+            slots = self._slot_of[ids]
+            hit = slots >= 0
+            nh = int(hit.sum())
+            if nh:
+                lens = self.record_lengths[ids[hit]]
+                copy_records(
+                    self._arena,
+                    slots[hit] * self.slot_bytes,
+                    dst,
+                    np.asarray(dst_off, np.int64)[hit],
+                    lens,
+                )
+                self._tick += 1
+                self._last_used[ids[hit]] = self._tick
+                self.hit_bytes += int(lens.sum())
+            self.hits += nh
+            self.misses += len(ids) - nh
+            return hit
+
+    # ------------------------------------------------------------- insert
+    def insert(self, ids: np.ndarray, src: np.ndarray, src_off: np.ndarray) -> int:
+        """Copy records into the cache from a flat uint8 source (a batch
+        arena or dense buffer); returns how many were newly inserted.
+
+        Already-resident ids are skipped (idempotent under the demand /
+        prefetch race), records wider than a slot are rejected, and when
+        free + evictable slots run out (everything else pinned) the
+        overflow is dropped rather than ever exceeding the budget.
+        """
+        ids = np.asarray(ids, np.int64)
+        src_off = np.asarray(src_off, np.int64)
+        if len(ids) == 0 or self.capacity == 0:
+            return 0
+        with self._lock:
+            uniq, first = np.unique(ids, return_index=True)
+            keep = self._slot_of[uniq] < 0
+            lens = self.record_lengths[uniq]
+            keep &= lens <= self.slot_bytes
+            uniq, first, lens = uniq[keep], first[keep], lens[keep]
+            need = len(uniq)
+            if need == 0:
+                return 0
+            if need > len(self._free):
+                self._evict_locked(need - len(self._free))
+            k = min(need, len(self._free))
+            if k < need:
+                self.rejected += need - k
+                uniq, first, lens = uniq[:k], first[:k], lens[:k]
+            if k == 0:
+                return 0
+            slots = np.asarray(self._free[-k:], np.int64)
+            del self._free[-k:]
+            copy_records(
+                src, src_off[first], self._arena, slots * self.slot_bytes, lens
+            )
+            self._slot_of[uniq] = slots
+            self._id_of[slots] = uniq
+            self._used_bytes += int(lens.sum())
+            self._tick += 1
+            self._last_used[uniq] = self._tick
+            self.insertions += k
+            return k
+
+    def _evict_locked(self, m: int):
+        """Drop up to ``m`` unpinned residents with the oldest ticks."""
+        occupied = np.flatnonzero(self._id_of >= 0)
+        cand_ids = self._id_of[occupied]
+        unpinned = self._pin[cand_ids] == 0
+        occupied, cand_ids = occupied[unpinned], cand_ids[unpinned]
+        if len(cand_ids) == 0:
+            return
+        if len(cand_ids) > m:
+            pick = np.argpartition(self._last_used[cand_ids], m - 1)[:m]
+            occupied, cand_ids = occupied[pick], cand_ids[pick]
+        self._slot_of[cand_ids] = -1
+        self._id_of[occupied] = -1
+        self._free.extend(int(s) for s in occupied)
+        self._used_bytes -= int(self.record_lengths[cand_ids].sum())
+        self.evictions += len(cand_ids)
+
+    def evict(self, m: int):
+        with self._lock:
+            self._evict_locked(m)
+
+    def clear(self):
+        with self._lock:
+            self._slot_of[:] = -1
+            self._id_of[:] = -1
+            self._free = list(range(self.capacity))
+            self._used_bytes = 0

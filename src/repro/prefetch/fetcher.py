@@ -1,0 +1,295 @@
+"""Prefetching fetch function: the tiered read path's runtime glue.
+
+``PrefetchingFetcher`` is a drop-in for
+:func:`repro.core.pipeline.store_fetch_fn`: call it with a batch's index
+array and it returns exactly what the plain fetcher would — a dense
+``(B, record_size)`` uint8 buffer or a
+:class:`~repro.storage.record_store.RaggedBatch` arena triple — except
+that records resident in the DRAM tier are gathered from memory and only
+the misses touch storage.  Batch bytes are **identical** with prefetch
+on or off (the cache holds exact payload bytes and the output packing
+rule is unchanged), for any pipeline producer count, so training
+reproducibility is preserved by construction.
+
+A background daemon thread executes the
+:class:`~repro.prefetch.scheduler.LookaheadScheduler`'s plans with the
+record store's coalesced ragged reader — sharing the store's
+GIL-releasing pread pool (``workers``) — so future batches stream into
+the cache while the trainer consumes the current one.  Demand misses
+(prefetch lagging, cold start) fall through to a direct coalesced read
+and fill the cache on the way out; the cache's insert idempotency makes
+the demand/prefetch race harmless.
+
+Accounting: demand-time DRAM-served records are counted in
+``store.stats.cache_hits`` / ``cache_hit_bytes`` (so ``records_per_io``
+keeps meaning "storage records per storage I/O"), while the scheduler's
+admission-time ``window_hits`` measure the storage reads the tier
+*avoided* — the number `IOPlan.cache_hit_fraction` models.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.prefetch.cache import TieredCache, copy_records
+from repro.prefetch.scheduler import LookaheadScheduler, batch_key
+from repro.storage.record_store import (
+    PAGE,
+    RaggedBatch,
+    RecordStore,
+    alloc_ragged,
+)
+
+_STOP = object()
+
+
+class PrefetchingFetcher:
+    """Tiered-cache fetch function over a record store + shuffler.
+
+    Use as ``InputPipeline(batch_iter_fn=f.batch_iter, fetch_fn=f)`` —
+    ``batch_iter`` re-syncs the lookahead window at epoch boundaries (and
+    is a pass-through otherwise), while ``__call__`` serves batches.
+    Calling the fetcher directly (without ``batch_iter``) also works as
+    long as batches arrive in stream order, which is what the pipeline's
+    shared ordered iterator guarantees.
+    """
+
+    def __init__(
+        self,
+        store: RecordStore,
+        shuffler,
+        *,
+        budget_bytes: int = 0,
+        lookahead: int = 8,
+        mode: str = "auto",
+        ring=None,
+        gap_bytes: int = PAGE,
+        workers: int = 1,
+        background: bool = True,
+        start_epoch: int = 0,
+        max_epochs: Optional[int] = None,
+        cache: Optional[TieredCache] = None,
+    ):
+        if mode == "auto":
+            mode = "ragged" if store.variable else "dense"
+        if mode not in ("dense", "ragged"):
+            raise ValueError(f"mode must be auto|dense|ragged, got {mode!r}")
+        if mode == "dense" and store.variable:
+            raise ValueError("dense mode needs a fixed-size store")
+        self.store = store
+        self.shuffler = shuffler
+        self.mode = mode
+        self.ring = ring
+        self.gap_bytes = gap_bytes
+        self.workers = workers
+        self.background = background
+        self.cache = (
+            cache
+            if cache is not None
+            else TieredCache(store.lengths(), budget_bytes)
+        )
+        self.scheduler = LookaheadScheduler(
+            shuffler,
+            self.cache,
+            lookahead=lookahead,
+            start_epoch=start_epoch,
+            max_epochs=max_epochs,
+        )
+        self._sched_lock = threading.Lock()
+        self._queue: "queue.Queue" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        # in-flight plan completion events, keyed by batch fingerprint:
+        # the demand path *waits* for its batch's outstanding prefetch
+        # instead of duplicating the read (without this, a compute-free
+        # consumer races the worker batch-for-batch and every record is
+        # read twice)
+        self._plan_done: dict = {}
+        self._closed = False
+        self.prefetch_batches = 0   # plans executed with a storage read
+        self.prefetch_records = 0   # records brought in by prefetch reads
+        self.last_error: Optional[BaseException] = None
+
+    # --------------------------------------------------------- scheduling
+    def batch_iter(self, epoch: int) -> Iterator[np.ndarray]:
+        """Drop-in ``batch_iter_fn``: re-syncs the lookahead window to
+        ``(epoch, 0)`` then yields the shuffler's batches unchanged."""
+        with self._sched_lock:
+            self._dispatch(self.scheduler.start_epoch(epoch))
+        yield from self.shuffler.epoch_batches(epoch)
+
+    def _dispatch(self, plans):
+        """Callers hold ``_sched_lock`` (the `_plan_done` registry is
+        mutated under it; the worker pops entries under it too).
+
+        Empty-fetch plans are queued too (in background mode): a batch
+        whose records were window-deduplicated into an *earlier* plan is
+        ready only once that plan executed, and FIFO order makes its own
+        (no-op) completion event imply exactly that — so the demand wait
+        below covers dedup'd batches across epoch boundaries as well."""
+        for p in plans:
+            if self.background:
+                self._ensure_thread()
+                self._plan_done[batch_key(p.batch)] = threading.Event()
+                self._queue.put(p)
+            elif p.fetch.size:
+                self._execute(p)
+
+    def _ensure_thread(self):
+        if self._thread is None and not self._closed:
+            self._thread = threading.Thread(
+                target=self._prefetch_loop,
+                name="prefetch-worker",
+                daemon=True,
+            )
+            self._thread.start()
+
+    def _prefetch_loop(self):
+        while True:
+            plan = self._queue.get()
+            try:
+                if plan is _STOP:
+                    return
+                try:
+                    self._execute(plan)
+                except BaseException as e:  # noqa: BLE001
+                    # a failed prefetch must not kill training: the
+                    # demand read of the same records will raise (or
+                    # succeed) in the consumer's own thread
+                    self.last_error = e
+                finally:
+                    with self._sched_lock:
+                        ev = self._plan_done.pop(batch_key(plan.batch), None)
+                    if ev is not None:
+                        ev.set()
+            finally:
+                self._queue.task_done()
+
+    def _execute(self, plan):
+        need = plan.fetch
+        if need.size:
+            # re-check residency at execution time: the demand path may
+            # have read (and inserted) these records while the plan sat
+            # in the queue
+            need = need[~self.cache.resident(need)]
+        if need.size == 0:
+            return
+        rb = self.store.read_batch_ragged(
+            need, gap_bytes=self.gap_bytes, workers=self.workers
+        )
+        self.cache.insert(need, rb.arena, rb.offsets)
+        self.prefetch_batches += 1
+        self.prefetch_records += len(need)
+
+    # -------------------------------------------------------------- serve
+    def __call__(self, indices: np.ndarray):
+        idx = np.asarray(indices, np.int64)
+        with self._sched_lock:
+            if not self.scheduler.primed:
+                self._dispatch(self.scheduler.fill())
+            ev = self._plan_done.get(batch_key(idx))
+        if ev is not None:
+            # this batch's prefetch is queued or running: wait for it
+            # rather than issuing a duplicate storage read (timeout =
+            # safety valve; the miss path below stays correct regardless)
+            ev.wait(timeout=60.0)
+        out = (
+            self._serve_dense(idx)
+            if self.mode == "dense"
+            else self._serve_ragged(idx)
+        )
+        # serve first, then slide: the served batch's pins drop only
+        # after its bytes are safely materialized.  Retirement is by
+        # batch identity — multi-producer pipelines complete fetches out
+        # of order, and retiring the head would unpin a different,
+        # still-unserved batch
+        with self._sched_lock:
+            self._dispatch(self.scheduler.advance(idx))
+        return out
+
+    def _serve_dense(self, indices) -> np.ndarray:
+        idx = np.asarray(indices, np.int64)
+        b = len(idx)
+        rs = int(self.store.record_size)
+        out = (
+            self.ring.acquire(b)
+            if self.ring is not None
+            else np.empty((b, rs), np.uint8)
+        )
+        if b == 0:
+            return out
+        try:
+            dst_off = np.arange(b, dtype=np.int64) * rs
+            hit = self.cache.gather(idx, out.reshape(-1), dst_off)
+            miss = ~hit
+            if miss.any():
+                tmp = self.store.read_batch_into(
+                    idx[miss], gap_bytes=self.gap_bytes, workers=self.workers
+                )
+                out[miss] = tmp
+                self.cache.insert(
+                    idx[miss],
+                    tmp.reshape(-1),
+                    np.arange(len(tmp), dtype=np.int64) * rs,
+                )
+            nh = int(hit.sum())
+            if nh:
+                self.store.stats.account_cache_hits(nh, nh * rs)
+            return out
+        except BaseException:
+            if self.ring is not None:
+                self.ring.recycle(out)  # failed fetch must not drain the ring
+            raise
+
+    def _serve_ragged(self, indices) -> RaggedBatch:
+        idx = np.asarray(indices, np.int64)
+        b = len(idx)
+        lens = self.store.lengths()[idx] if b else np.empty(0, np.int64)
+        arena, out_off, out_len = alloc_ragged(lens, self.ring)
+        if b == 0:
+            return RaggedBatch(arena, out_off, out_len)
+        try:
+            dst_off = out_off.astype(np.int64)
+            hit = self.cache.gather(idx, arena, dst_off)
+            miss = ~hit
+            if miss.any():
+                rb = self.store.read_batch_ragged(
+                    idx[miss], gap_bytes=self.gap_bytes, workers=self.workers
+                )
+                copy_records(
+                    rb.arena, rb.offsets, arena, dst_off[miss], rb.lengths
+                )
+                self.cache.insert(idx[miss], rb.arena, rb.offsets)
+            nh = int(hit.sum())
+            if nh:
+                self.store.stats.account_cache_hits(
+                    nh, int(lens[hit].sum())
+                )
+            return RaggedBatch(arena, out_off, out_len)
+        except BaseException:
+            if self.ring is not None:
+                self.ring.recycle(arena)
+            raise
+
+    # ----------------------------------------------------------- lifecycle
+    def drain(self):
+        """Block until every queued prefetch plan has executed (tests and
+        benchmarks; the training path never needs it)."""
+        if self._thread is not None:
+            self._queue.join()
+
+    def close(self):
+        """Stop the background worker (cache contents stay valid)."""
+        self._closed = True
+        if self._thread is not None:
+            self._queue.put(_STOP)
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,265 @@
+"""Clairvoyant lookahead planning over a shuffler's future index stream.
+
+LIRS (and BMF/TFIP) generate the whole epoch's batch sequence from a few
+integers, so the scheduler can walk arbitrarily far ahead of the batch
+the trainer is consuming — including across epoch boundaries, where the
+*next* epoch's permutation is equally known.  It maintains a sliding
+window of the next ``lookahead`` batches and, as each batch is admitted,
+emits a :class:`PrefetchPlan` naming exactly the records storage must
+produce for it:
+
+* records already resident in the :class:`~repro.prefetch.cache.TieredCache`
+  are *window hits* — no fetch, and the admission pins them so eviction
+  cannot take them before use (known reuse distance → retention);
+* records already planned by an earlier batch still inside the window
+  are deduplicated — a record is fetched at most once per window;
+* everything else becomes the plan's ``fetch`` array, coalesced later by
+  the record store's shared ``_sorted_plan`` cut rule.
+
+The scheduler is pure bookkeeping (no threads, no I/O): the
+:class:`~repro.prefetch.fetcher.PrefetchingFetcher` drives it and
+executes its plans.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.prefetch.cache import TieredCache
+
+
+def batch_key(batch: np.ndarray) -> Tuple[int, ...]:
+    """Cheap fingerprint identifying a batch inside the window (length +
+    first/middle/last records).  Collisions between two simultaneously
+    live batches are astronomically unlikely and only cost a redundant
+    read, never correctness — mismatches fall back to head retirement /
+    the demand miss path."""
+    n = len(batch)
+    if n == 0:
+        return (0,)
+    return (n, int(batch[0]), int(batch[n // 2]), int(batch[-1]))
+
+
+@dataclasses.dataclass
+class PrefetchPlan:
+    """What storage must produce before one future batch is served."""
+
+    epoch: int
+    seq: int                 # batch sequence number within the epoch
+    batch: np.ndarray        # the batch's record indices, as yielded
+    fetch: np.ndarray        # deduplicated subset that needs a storage read
+    fetch_bytes: int         # payload bytes the fetch will bring in
+
+
+class LookaheadScheduler:
+    """Sliding window of the next ``lookahead`` batches of a shuffler.
+
+    ``advance()`` retires the oldest (just-served) batch and admits the
+    next future one; ``fill()`` / ``start_epoch()`` prime or re-sync the
+    window.  Pin bookkeeping against the cache mirrors window membership
+    exactly: every admitted batch pins its distinct records once, every
+    retirement unpins them.
+    """
+
+    def __init__(
+        self,
+        shuffler,
+        cache: Optional[TieredCache] = None,
+        lookahead: int = 8,
+        start_epoch: int = 0,
+        max_epochs: Optional[int] = None,
+        record_lengths: Optional[np.ndarray] = None,
+    ):
+        self.shuffler = shuffler
+        self.cache = cache
+        self.lookahead = max(1, int(lookahead))
+        self.max_epochs = max_epochs
+        if record_lengths is not None:
+            self._lengths = np.asarray(record_lengths, np.int64)
+        elif cache is not None:
+            self._lengths = cache.record_lengths
+        else:
+            self._lengths = None
+        # per-record membership count of the current window (dedup + pins)
+        self._window_count = np.zeros(shuffler.num_items, np.int32)
+        self._pinned = 0       # distinct records currently pinned, summed
+        self._pending: Optional[Tuple[int, int, np.ndarray]] = None
+        self.primed = False
+        # admission-time accounting: a "window hit" is a record that was
+        # already resident when its batch entered the window, i.e. an
+        # epoch storage read the DRAM tier avoided
+        self.admitted_records = 0
+        self.window_hits = 0
+        self.window_hit_bytes = 0
+        self.planned_records = 0
+        self.planned_bytes = 0
+        self._window: deque = deque()
+        self._stream: Iterator[Tuple[int, int, np.ndarray]] = self._gen(
+            start_epoch
+        )
+
+    # ------------------------------------------------------------- stream
+    def _gen(self, epoch0: int) -> Iterator[Tuple[int, int, np.ndarray]]:
+        e = epoch0
+        while self.max_epochs is None or e < self.max_epochs:
+            for seq, batch in enumerate(self.shuffler.epoch_batches(e)):
+                yield e, seq, np.asarray(batch, np.int64)
+            e += 1
+
+    @property
+    def head(self) -> Optional[Tuple[int, int]]:
+        """(epoch, seq) of the next batch the demand side will consume."""
+        return self._window[0][:2] if self._window else None
+
+    @property
+    def window_records(self) -> int:
+        """Distinct records currently pinned by the window — the slice of
+        the cache budget the prefetch working set occupies (what
+        ``IOPlan``'s ``prefetch_window_bytes`` models)."""
+        return self._pinned
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of admitted records that needed no storage read: the
+        avoided-I/O notion ``IOPlan.cache_hit_fraction`` models (window
+        dedups count as hits — their one read is charged to the first
+        occurrence)."""
+        if not self.admitted_records:
+            return 0.0
+        return 1.0 - self.planned_records / self.admitted_records
+
+    # ------------------------------------------------------------- window
+    def _pin_limit(self) -> Optional[int]:
+        """How many distinct records the window may pin at once.
+
+        Half the cache capacity: the window is the prefetch working set
+        (records land pinned, stay until served), and letting it flood
+        the whole tier leaves no slots for cross-epoch LRU retention —
+        worse, prefetched records start getting *rejected* and every
+        batch is read twice.  No cache → no limit (planning is free).
+        """
+        if self.cache is None:
+            return None
+        return max(0, self.cache.capacity // 2)
+
+    def _admit_item(self, epoch, seq, batch, uniq) -> PrefetchPlan:
+        fresh = uniq[self._window_count[uniq] == 0]
+        if self.cache is not None and self.cache.capacity > 0:
+            hit = self.cache.resident(fresh)
+            resident, fetch = fresh[hit], fresh[~hit]
+        elif self.cache is not None:
+            # 0-capacity tier: nothing can be retained, so prefetching
+            # would only read every record twice — plan nothing
+            resident, fetch = fresh[:0], fresh[:0]
+        else:
+            resident, fetch = fresh[:0], fresh
+        to_plan = len(fetch)
+        limit = self._pin_limit()
+        if limit is not None:
+            # a single batch wider than the pin budget (window-empty
+            # admission) must not prefetch more than the tier can hold —
+            # the overflow would be read, rejected by insert, and read
+            # again on demand; leave it to the (single) demand read
+            to_plan = min(to_plan, max(0, limit - self._pinned))
+        self._window_count[uniq] += 1
+        self._pinned += len(uniq)
+        if self.cache is not None:
+            self.cache.pin(uniq)
+        self.admitted_records += len(batch)
+        self.window_hits += len(resident)
+        if self._lengths is not None:
+            self.window_hit_bytes += int(self._lengths[resident].sum())
+        # overflow records are still storage reads (by the demand path),
+        # so the avoided-I/O accounting charges the full fetch set
+        self.planned_records += len(fetch)
+        if self._lengths is not None:
+            self.planned_bytes += int(self._lengths[fetch].sum())
+        fetch = fetch[:to_plan]
+        nbytes = (
+            int(self._lengths[fetch].sum()) if self._lengths is not None else 0
+        )
+        self._window.append((epoch, seq, uniq, batch_key(batch)))
+        return PrefetchPlan(epoch, seq, batch, fetch, nbytes)
+
+    def _top_up(self) -> List[PrefetchPlan]:
+        """Admit batches until the window holds ``lookahead`` of them, the
+        pin limit is reached, or the stream ends."""
+        plans: List[PrefetchPlan] = []
+        limit = self._pin_limit()
+        while len(self._window) < self.lookahead:
+            item = self._pending
+            self._pending = None
+            if item is None:
+                item = next(self._stream, None)
+            if item is None:
+                break
+            epoch, seq, batch = item
+            uniq = np.unique(batch)
+            if (
+                limit is not None
+                and self._window
+                and self._pinned + len(uniq) > limit
+            ):
+                self._pending = item  # window is as deep as the tier allows
+                break
+            plans.append(self._admit_item(epoch, seq, batch, uniq))
+        return plans
+
+    def _retire(self, key: Optional[Tuple[int, ...]] = None):
+        """Retire the window entry matching ``key`` (the batch that was
+        actually served — under multi-producer pipelines fetches complete
+        out of order, and retiring the head would unpin a *different*,
+        still-unserved batch); no match or no key retires the head."""
+        if not self._window:
+            return
+        pos = 0
+        if key is not None:
+            for j, entry in enumerate(self._window):
+                if entry[3] == key:
+                    pos = j
+                    break
+        _, _, uniq, _ = self._window[pos]
+        del self._window[pos]
+        self._window_count[uniq] -= 1
+        self._pinned -= len(uniq)
+        if self.cache is not None:
+            self.cache.unpin(uniq)
+
+    def fill(self) -> List[PrefetchPlan]:
+        """Prime the window; returns the new plans in admission order."""
+        self.primed = True
+        return self._top_up()
+
+    def advance(self, batch: Optional[np.ndarray] = None) -> List[PrefetchPlan]:
+        """One batch was served: retire it (by identity when ``batch`` is
+        given, else the window head), slide the window ahead."""
+        self._retire(batch_key(batch) if batch is not None else None)
+        return self._top_up()
+
+    def start_epoch(self, epoch: int) -> List[PrefetchPlan]:
+        """Position the window at ``(epoch, 0)``.
+
+        A no-op (returns ``[]``) when the stream is already there — the
+        common case of epochs consumed back-to-back, where the window has
+        legitimately crossed the boundary ahead of demand.  Anything else
+        (first use, an abandoned epoch, epoch replay) resets and refills.
+        """
+        if self.primed and self.head == (epoch, 0):
+            return []
+        self.reset(epoch)
+        return self.fill()
+
+    def reset(self, epoch: int):
+        """Drop the window (unpinning everything) and restart the stream
+        at ``(epoch, 0)``.  Cache contents survive — only planning state
+        resets."""
+        while self._window:
+            self._retire()
+        self._window_count[:] = 0
+        self._pinned = 0
+        self._pending = None
+        self._stream = self._gen(epoch)
+        self.primed = False

@@ -61,14 +61,24 @@ class StorageModel:
         priced at the plan's *issued* I/O count (already divided by the
         coalescing factor for batch engines — dense or ragged) with the
         plan's queue depth overlapping per-op latency up to
-        ``max_queue_depth``."""
+        ``max_queue_depth``.
+
+        A partially cache-served epoch (``plan.cache_hit_fraction`` > 0,
+        set when a DRAM tier sits above the device — the clairvoyant
+        prefetch subsystem) only sends the *miss* fraction to storage:
+        issued random I/Os and random bytes both scale by
+        ``1 − cache_hit_fraction``; sequential volume (BMF/TFIP block
+        scans) is not tiered and stays full price."""
         t = 0.0
         if plan.epoch_seq_read_bytes:
             t += self.t_seq_read(plan.epoch_seq_read_bytes)
-        if plan.epoch_rand_read_ios:
+        miss = 1.0 - min(
+            1.0, max(0.0, float(getattr(plan, "cache_hit_fraction", 0.0)))
+        )
+        if plan.epoch_rand_read_ios and miss > 0.0:
             t += self.t_rand_read(
-                plan.epoch_rand_read_ios,
-                plan.epoch_rand_read_bytes,
+                plan.epoch_rand_read_ios * miss,
+                plan.epoch_rand_read_bytes * miss,
                 queue_depth=getattr(plan, "queue_depth", 1.0),
             )
         return t

@@ -80,6 +80,8 @@ class IOStats:
     batch_ios: int = 0           # syscalls the batch path issued for them
     coalesced_ios: int = 0       # batch syscalls that served >= 2 records
     coalesced_records: int = 0   # records served by those merged syscalls
+    cache_hits: int = 0          # records served from the DRAM tier instead
+    cache_hit_bytes: int = 0     # payload bytes those hits avoided reading
     _lock: threading.Lock = field(
         default_factory=threading.Lock, repr=False, compare=False
     )
@@ -148,9 +150,20 @@ class IOStats:
             self.coalesced_ios += int(merged.sum())
             self.coalesced_records += int(recs_per_ext[merged].sum())
 
+    def account_cache_hits(self, records: int, nbytes: int):
+        """Records a DRAM tier (``repro.prefetch``) served in place of
+        storage.  Kept separate from ``batch_records`` so
+        ``records_per_io`` keeps meaning *storage* records per *storage*
+        I/O when part of a batch never touches the device."""
+        with self._lock:
+            self.cache_hits += records
+            self.cache_hit_bytes += nbytes
+
     @property
     def records_per_io(self) -> float:
-        """Coalescing efficiency of the batch path (1.0 = no merging)."""
+        """Coalescing efficiency of the batch path (1.0 = no merging).
+        Cache-served records are excluded by construction: only records
+        that actually reached storage count in ``batch_records``."""
         return self.batch_records / self.batch_ios if self.batch_ios else 0.0
 
     def reset(self):
@@ -160,6 +173,7 @@ class IOStats:
             self.last_offset = -1
             self.batch_records = self.batch_ios = 0
             self.coalesced_ios = self.coalesced_records = 0
+            self.cache_hits = self.cache_hit_bytes = 0
 
 
 @dataclass
@@ -268,6 +282,37 @@ class RaggedBatch(NamedTuple):
         """Materialize per-record ``bytes`` (test/compat path — the hot
         path never does this)."""
         return [bytes(self.record(i)) for i in range(len(self))]
+
+
+def alloc_ragged(
+    lens: np.ndarray, ring: Optional["RaggedBufferRing"] = None
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Allocate and pack a batch-order arena triple for the given
+    per-record payload lengths: ``offsets`` is the exclusive prefix sum
+    (the :class:`RaggedBatch` packing rule), the int32 2 GiB arena cap is
+    enforced, and slots come from ``ring`` when given (heap fallback
+    otherwise).  Shared by :meth:`RecordStore.read_batch_ragged` and the
+    tiered read path's ragged serve, so the materialization contract has
+    exactly one definition."""
+    b = len(lens)
+    total = int(lens.sum()) if b else 0
+    if total > np.iinfo(np.int32).max:
+        raise ValueError(
+            f"ragged batch of {total} bytes exceeds the int32 arena "
+            "cap (2 GiB); split the batch"
+        )
+    if ring is not None:
+        arena, out_off, out_len = ring.acquire(total, b)
+    else:
+        arena = np.empty(total, np.uint8)
+        out_off = np.empty(b, np.int32)
+        out_len = np.empty(b, np.int32)
+    if b:
+        out_len[:] = lens
+        out_off[0] = 0
+        if b > 1:
+            out_off[1:] = np.cumsum(lens[:-1])
+    return arena, out_off, out_len
 
 
 def _pread_full(fd: int, buf, offset: int):
@@ -546,23 +591,18 @@ class RecordStore:
         workers: int = 1,
     ) -> List[bytes]:
         """Coalesced batch read returning ``List[bytes]`` (drop-in for
-        :meth:`read_batch`; works for fixed and variable-length stores)."""
-        idx = np.asarray(indices, dtype=np.int64)
-        extents = self.plan_batch(idx, gap_bytes)
-        out: List[Optional[bytes]] = [None] * len(idx)
-        fd = self._fd
+        :meth:`read_batch`; works for fixed and variable-length stores).
 
-        def work(chunk: List[ReadExtent]):
-            for ext in chunk:
-                blob = bytearray(ext.length)
-                _pread_full(fd, blob, ext.offset)
-                for r, o, ln in zip(ext.rows, ext.rec_offsets, ext.rec_lengths):
-                    out[r] = bytes(blob[o : o + ln])
-
-        self._workers_map(work, extents, workers)
-        # post-execution accounting: see read_batch_into
-        self.stats.account_plan(extents)
-        return out  # type: ignore[return-value]
+        Rides the ragged engine end-to-end: the plan is the vectorized
+        ``_sorted_plan`` cut rule (no per-record Python planning, int32
+        radix sort), extents land via the same GIL-releasing workers, and
+        ONE arena gather materializes the batch — only the ``List[bytes]``
+        contract itself still costs one object per record, at the very
+        end.  Identical I/O plan and :class:`IOStats` accounting as
+        :meth:`read_batch_ragged` by construction."""
+        return self.read_batch_ragged(
+            indices, gap_bytes=gap_bytes, workers=workers
+        ).tolist()
 
     def read_batch_ragged(
         self,
@@ -600,23 +640,13 @@ class RecordStore:
         else:
             offs = np.empty(0, np.int64)
             lens = np.empty(0, np.int64)
-        total = int(lens.sum())
-        if total > np.iinfo(np.int32).max:
-            raise ValueError(
-                f"ragged batch of {total} bytes exceeds the int32 arena "
-                "cap (2 GiB); split the batch"
-            )
-        if ring is not None:
-            arena, out_off, out_len = ring.acquire(total, b)
-        else:
-            arena = np.empty(total, np.uint8)
-            out_off = np.empty(b, np.int32)
-            out_len = np.empty(b, np.int32)
+        arena, out_off, out_len = alloc_ragged(lens, ring)
         if b == 0:
             return RaggedBatch(arena, out_off, out_len)
         try:
             return self._fill_ragged(
-                arena, out_off, out_len, offs, lens, total, gap_bytes, workers
+                arena, out_off, out_len, offs, lens, int(lens.sum()),
+                gap_bytes, workers,
             )
         except BaseException:
             # hand the slot back on failure (e.g. a short pread the caller
@@ -629,13 +659,8 @@ class RecordStore:
     def _fill_ragged(
         self, arena, out_off, out_len, offs, lens, total, gap_bytes, workers
     ) -> RaggedBatch:
+        # arena/out_off/out_len arrive packed by :func:`alloc_ragged`
         b = len(lens)
-        out_len[:] = lens
-        # packed in batch order: offsets are the exclusive prefix sum
-        out_off[0] = 0
-        if b > 1:
-            out_off[1:] = np.cumsum(lens[:-1])
-
         order, soff, slen, ends, new_ext = _sorted_plan(offs, lens, gap_bytes)
         ext_id = np.cumsum(new_ext) - 1
         starts = np.flatnonzero(new_ext)

@@ -67,13 +67,19 @@ class Trainer:
         put_fn: Optional[Callable] = None,
         num_producers: int = 1,
         recycle_fn: Optional[Callable] = None,
+        batch_iter_fn: Optional[Callable] = None,
     ):
+        """``batch_iter_fn`` overrides the default ``shuffler.epoch_batches``
+        source — e.g. a ``PrefetchingFetcher.batch_iter``, which re-syncs
+        the clairvoyant lookahead window at each epoch boundary while
+        yielding the identical batch sequence."""
         self.cfg = cfg
         self.loop_cfg = loop_cfg
         self.optimizer = AdamW(opt_cfg)
         self.shuffler = shuffler
         self.pipeline = InputPipeline(
-            batch_iter_fn=lambda epoch: shuffler.epoch_batches(epoch),
+            batch_iter_fn=batch_iter_fn
+            or (lambda epoch: shuffler.epoch_batches(epoch)),
             fetch_fn=fetch_fn,
             put_fn=put_fn,
             num_producers=num_producers,
