@@ -4,37 +4,43 @@ Because LIRS permutes *indexes*, the whole epoch's storage order is known
 before the first read; this benchmark measures what the
 ``repro.prefetch`` subsystem buys when it exploits that:
 
-* **hit-rate sweep** — steady-state DRAM-tier hit rate at several cache
-  budgets (fractions of the dataset), measured at window-admission time
-  (= storage reads avoided), against ``IOPlan.cache_hit_fraction``'s
-  LRU-under-permutation closed form ``c + (1−c)·ln(1−c)``.  Full-range
-  shuffling is adversarial for recency, so partial budgets hit far below
-  ``c`` — the model has to track the measured curve, not ``budget/total``.
+* **policy sweep** — steady-state DRAM-tier hit rate at several cache
+  budgets (fractions of the dataset) for both eviction policies,
+  measured at window-admission time (= storage reads avoided), against
+  the per-policy ``IOPlan.cache_hit_fraction`` closed forms: LRU's
+  ``c + (1−c)·ln(1−c) (+ λ·c prefetch correction)`` and Belady's exact
+  ``c``.  Full-range shuffling is adversarial for recency, so LRU hits
+  far below ``c`` at partial budgets; Belady — farthest next use, exact
+  under clairvoyance — serves one hit per slot per epoch, the pigeonhole
+  bound, and must sit at or above LRU at **every** budget point.
 * **cold vs warm epoch throughput** — consumer-side wall time of one
   epoch through the ``InputPipeline``: the cold coalesced path
   (``store_fetch_fn``, every batch read from storage on demand) vs the
-  warm tiered path (``PrefetchingFetcher`` after a warm-up epoch:
-  resident records gathered from DRAM, misses prefetched ahead of demand
-  by the background worker through the same pread pool).  The headline
-  acceptance number is the warm/cold speedup at the full-coverage budget
-  (any budget ≥ 25% of the dataset qualifies; the sweep shows where the
-  crossover happens).  To be explicit about what partial budgets can
-  show *on this box*: the benchmark file sits in the OS page cache and
-  the consumer does zero compute, so direct "storage" reads are already
-  memcpy-speed and a tier that still has to read ``(1−hit)·N`` records
-  (plus one insert + one gather copy) cannot beat them — partial-budget
-  sweep points honestly land below 1×.  Their value is the *avoided
-  device I/O* on real storage, which ``modeled_epoch_read_s`` prices per
-  Table 2 device via ``IOPlan.cache_hit_fraction``; the crossover to
-  wall-clock wins happens once residency beats the copy overhead (full
-  coverage here: demand becomes pure DRAM gather, 3-4×).
+  warm tiered path (``PrefetchingFetcher`` after a warm-up epoch).  The
+  headline acceptance number is the warm/cold speedup at the
+  full-coverage budget (any budget ≥ 25% of the dataset qualifies).  To
+  be explicit about what partial budgets can show *on this box*: the
+  benchmark file sits in the OS page cache and the consumer does zero
+  compute, so direct "storage" reads are already memcpy-speed and a tier
+  that still has to read ``(1−hit)·N`` records cannot beat them —
+  partial-budget sweep points honestly land below 1×.  Their value is
+  the *avoided device I/O* on real storage, which ``modeled_epoch_read_s``
+  prices per Table 2 device via ``IOPlan.cache_hit_fraction``.
 * **determinism spot-check** — first warm batch byte-identical to the
-  cold path's.
+  cold path's, for every policy.
+
+Hygiene counters (``rejected``, ``stray_unpins``, ``scratch_copies``)
+are surfaced per sweep point: stray unpins must be zero always, and
+warm full-coverage epochs must run zero scratch copies (the ring
+handoff).
 
 Emits JSON to benchmarks/results/prefetch.json and harness CSV rows.
+``python -m benchmarks.prefetch --policy-sweep`` prints the LRU-vs-Belady
+hit-rate curves (and fails loudly if Belady ever dips below LRU).
 """
 from __future__ import annotations
 
+import sys
 import tempfile
 import time
 
@@ -54,6 +60,7 @@ WORKERS = 4
 LOOKAHEAD = 8
 GAP = 4 * PAGE
 BUDGET_FRACS = [0.1, 0.25, 0.5, 1.0]
+POLICIES = ["lru", "belady"]
 WARM_EPOCHS = 3   # measured epochs after the warm-up epoch
 ACCEPT_MIN_BUDGET = 0.25
 
@@ -105,79 +112,108 @@ def run(force: bool = False):
 
         for frac in BUDGET_FRACS:
             budget = int(frac * total_bytes)
-            fetcher = PrefetchingFetcher(
-                store,
-                sh,
-                budget_bytes=budget,
-                lookahead=LOOKAHEAD,
-                gap_bytes=GAP,
-                workers=WORKERS,
+            point = {"budget_bytes": budget}
+            for policy in POLICIES:
+                fetcher = PrefetchingFetcher(
+                    store,
+                    sh,
+                    budget_bytes=budget,
+                    lookahead=LOOKAHEAD,
+                    gap_bytes=GAP,
+                    workers=WORKERS,
+                    policy=policy,
+                )
+                pipe = InputPipeline(fetcher.batch_iter, fetcher, prefetch=2)
+                _epoch_seconds(pipe, 0)  # warm-up epoch: populate the tier
+                fetcher.drain()
+                sched = fetcher.scheduler
+                p0, a0 = sched.planned_records, sched.admitted_records
+                store.stats.reset()
+                scr0 = fetcher.cache.scratch_copies
+                warm_s = min(
+                    _epoch_seconds(pipe, e) for e in range(1, 1 + WARM_EPOCHS)
+                )
+                # avoided-storage-reads rate over the measured epochs
+                # (window dedups count as hits; their one read charges the
+                # first use)
+                measured_hit = 1.0 - (sched.planned_records - p0) / max(
+                    1, sched.admitted_records - a0
+                )
+                window_records = sched.window_records
+                storage_records = store.stats.batch_records  # pre-probe
+                plan = sh.io_plan(
+                    total_bytes,
+                    is_sparse=False,
+                    coalesce_gap=GAP,
+                    queue_depth=WORKERS,
+                    cache_budget_bytes=budget,
+                    prefetch_window_bytes=window_records * RECORD_BYTES,
+                    eviction_policy=policy,
+                )
+                # determinism spot-check against the cold path (after the
+                # timing and the stats snapshot: the out-of-stream probe
+                # batch issues its own demand reads)
+                warm_first = bytes(fetcher(first_idx).reshape(-1))
+                fetcher.close()
+                point[policy] = {
+                    "warm_epoch_s": warm_s,
+                    "warm_records_per_s": N_RECORDS / warm_s,
+                    "warm_speedup_vs_cold": cold_s / warm_s,
+                    "window_records": window_records,
+                    "measured_hit_rate": measured_hit,
+                    "model_hit_rate": plan.cache_hit_fraction,
+                    "hit_rate_abs_err": abs(
+                        measured_hit - plan.cache_hit_fraction
+                    ),
+                    "storage_records_per_epoch": storage_records / WARM_EPOCHS,
+                    "demand_cache_hits": fetcher.cache.hits,
+                    "prefetched_records": fetcher.prefetch_records,
+                    "rejected": fetcher.cache.rejected,
+                    "stray_unpins": fetcher.cache.stray_unpins,
+                    "warm_scratch_copies": fetcher.cache.scratch_copies - scr0,
+                    "batches_identical_to_cold": warm_first == cold_first,
+                    "modeled_epoch_read_s": {
+                        name: dev.t_epoch_read(plan)
+                        for name, dev in STORAGE_MODELS.items()
+                    },
+                }
+            point["belady_minus_lru_hit"] = (
+                point["belady"]["measured_hit_rate"]
+                - point["lru"]["measured_hit_rate"]
             )
-            pipe = InputPipeline(fetcher.batch_iter, fetcher, prefetch=2)
-            _epoch_seconds(pipe, 0)  # warm-up epoch: populate the tier
-            fetcher.drain()
-            sched = fetcher.scheduler
-            p0, a0 = sched.planned_records, sched.admitted_records
-            store.stats.reset()
-            warm_s = min(
-                _epoch_seconds(pipe, e) for e in range(1, 1 + WARM_EPOCHS)
-            )
-            # avoided-storage-reads rate over the measured epochs (window
-            # dedups count as hits; their one read charges the first use)
-            measured_hit = 1.0 - (sched.planned_records - p0) / max(
-                1, sched.admitted_records - a0
-            )
-            window_records = sched.window_records
-            storage_records = store.stats.batch_records  # pre-probe snapshot
-            plan = sh.io_plan(
-                total_bytes,
-                is_sparse=False,
-                coalesce_gap=GAP,
-                queue_depth=WORKERS,
-                cache_budget_bytes=budget,
-                prefetch_window_bytes=window_records * RECORD_BYTES,
-            )
-            # determinism spot-check against the cold path (after the
-            # timing and the stats snapshot: the out-of-stream probe
-            # batch issues its own demand reads)
-            warm_first = bytes(fetcher(first_idx).reshape(-1))
-            fetcher.close()
-            out["budgets"][f"{frac:.2f}"] = {
-                "budget_bytes": budget,
-                "warm_epoch_s": warm_s,
-                "warm_records_per_s": N_RECORDS / warm_s,
-                "warm_speedup_vs_cold": cold_s / warm_s,
-                "window_records": window_records,
-                "measured_hit_rate": measured_hit,
-                "model_hit_rate": plan.cache_hit_fraction,
-                "hit_rate_abs_err": abs(measured_hit - plan.cache_hit_fraction),
-                "storage_records_per_epoch": storage_records / WARM_EPOCHS,
-                "demand_cache_hits": fetcher.cache.hits,
-                "prefetched_records": fetcher.prefetch_records,
-                "batches_identical_to_cold": warm_first == cold_first,
-                "modeled_epoch_read_s": {
-                    name: dev.t_epoch_read(plan)
-                    for name, dev in STORAGE_MODELS.items()
-                },
-            }
+            out["budgets"][f"{frac:.2f}"] = point
 
         # acceptance headline: best warm speedup among budgets covering
         # >= 25% of the dataset (the sweep shows the full curve)
-        eligible = {
-            f: e
+        eligible = [
+            e[pol]
             for f, e in out["budgets"].items()
+            for pol in POLICIES
             if float(f) >= ACCEPT_MIN_BUDGET
-        }
-        best = max(eligible.values(), key=lambda e: e["warm_speedup_vs_cold"])
+        ]
+        best = max(eligible, key=lambda e: e["warm_speedup_vs_cold"])
         out["headline"] = {
             "warm_speedup_vs_cold": best["warm_speedup_vs_cold"],
-            "at_budget_bytes": best["budget_bytes"],
-            "at_budget_fraction": best["budget_bytes"] / total_bytes,
             "measured_hit_rate": best["measured_hit_rate"],
             "model_hit_rate": best["model_hit_rate"],
-            "deterministic": all(
-                e["batches_identical_to_cold"]
+            "belady_never_below_lru": all(
+                e["belady_minus_lru_hit"] >= -1e-9
                 for e in out["budgets"].values()
+            ),
+            "max_hit_rate_abs_err": max(
+                e[pol]["hit_rate_abs_err"]
+                for e in out["budgets"].values()
+                for pol in POLICIES
+            ),
+            "stray_unpins_total": sum(
+                e[pol]["stray_unpins"]
+                for e in out["budgets"].values()
+                for pol in POLICIES
+            ),
+            "deterministic": all(
+                e[pol]["batches_identical_to_cold"]
+                for e in out["budgets"].values()
+                for pol in POLICIES
             ),
         }
         store.close()
@@ -196,32 +232,73 @@ def rows():
         )
     ]
     for frac, e in res["budgets"].items():
-        out.append(
-            (
-                f"prefetch/warm_budget{frac}",
-                1e6 / e["warm_records_per_s"],
-                f"{e['warm_records_per_s']:,.0f} rec/s "
-                f"x{e['warm_speedup_vs_cold']:.1f} vs cold "
-                f"hit={e['measured_hit_rate']:.3f} "
-                f"(model {e['model_hit_rate']:.3f}) "
-                f"identical={e['batches_identical_to_cold']}",
+        for pol in POLICIES:
+            p = e[pol]
+            out.append(
+                (
+                    f"prefetch/{pol}_budget{frac}",
+                    1e6 / p["warm_records_per_s"],
+                    f"{p['warm_records_per_s']:,.0f} rec/s "
+                    f"x{p['warm_speedup_vs_cold']:.1f} vs cold "
+                    f"hit={p['measured_hit_rate']:.3f} "
+                    f"(model {p['model_hit_rate']:.3f}) "
+                    f"identical={p['batches_identical_to_cold']}",
+                )
             )
-        )
     h = res["headline"]
     out.append(
         (
             "prefetch/headline",
             1e6 / res["cold_records_per_s"] / h["warm_speedup_vs_cold"],
-            f"x{h['warm_speedup_vs_cold']:.1f} warm vs cold at "
-            f"{h['at_budget_fraction']:.0%} budget, "
+            f"x{h['warm_speedup_vs_cold']:.1f} warm vs cold, "
             f"hit {h['measured_hit_rate']:.3f} vs model "
-            f"{h['model_hit_rate']:.3f}, deterministic={h['deterministic']}",
+            f"{h['model_hit_rate']:.3f}, "
+            f"belady>=lru={h['belady_never_below_lru']}, "
+            f"max_model_err={h['max_hit_rate_abs_err']:.3f}, "
+            f"deterministic={h['deterministic']}",
         )
     )
     return out
 
 
+def policy_sweep(force: bool = True) -> bool:
+    """Print the LRU-vs-Belady hit-rate curves vs budget; returns whether
+    the sweep meets the acceptance bar (Belady ≥ LRU at every point,
+    measured ≈ model, byte-identity, zero stray unpins)."""
+    res = run(force=force)
+    print(f"{'budget':>8} {'lru meas':>9} {'lru model':>10} "
+          f"{'bel meas':>9} {'bel model':>10} {'Δ(bel-lru)':>11}")
+    ok = True
+    for frac, e in sorted(res["budgets"].items(), key=lambda kv: float(kv[0])):
+        lru, bel = e["lru"], e["belady"]
+        print(
+            f"{frac:>8} {lru['measured_hit_rate']:>9.4f} "
+            f"{lru['model_hit_rate']:>10.4f} "
+            f"{bel['measured_hit_rate']:>9.4f} "
+            f"{bel['model_hit_rate']:>10.4f} "
+            f"{e['belady_minus_lru_hit']:>+11.4f}"
+        )
+        ok &= e["belady_minus_lru_hit"] >= -1e-9
+        for pol in POLICIES:
+            p = e[pol]
+            ok &= p["hit_rate_abs_err"] <= max(
+                0.05, 0.12 * p["model_hit_rate"]
+            )
+            ok &= p["batches_identical_to_cold"]
+            ok &= p["stray_unpins"] == 0
+    h = res["headline"]
+    print(
+        f"headline: x{h['warm_speedup_vs_cold']:.2f} warm vs cold, "
+        f"belady>=lru={h['belady_never_below_lru']}, "
+        f"max_model_err={h['max_hit_rate_abs_err']:.4f}, "
+        f"deterministic={h['deterministic']}, sweep_ok={ok}"
+    )
+    return ok
+
+
 if __name__ == "__main__":
+    if "--policy-sweep" in sys.argv:
+        sys.exit(0 if policy_sweep(force="--cached" not in sys.argv) else 1)
     run(force=True)
     for r in rows():
         print(",".join(map(str, r)))

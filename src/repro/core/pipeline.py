@@ -259,6 +259,7 @@ def store_fetch_fn(
     lookahead: int = 8,
     prefetch_background: bool = True,
     max_epochs: Optional[int] = None,
+    eviction_policy: str = "lru",
 ) -> Callable[[np.ndarray], Any]:
     """Build an :class:`InputPipeline` ``fetch_fn`` over a record store.
 
@@ -275,9 +276,11 @@ def store_fetch_fn(
     read path instead: a
     :class:`~repro.prefetch.fetcher.PrefetchingFetcher` serving resident
     records from a byte-budgeted DRAM cache and prefetching future
-    batches along the shuffler's known index stream.  The returned
-    object is still a plain ``fetch_fn`` (batch bytes are identical with
-    the tier on or off); additionally pass its ``batch_iter`` as the
+    batches along the shuffler's known index stream, evicting by
+    ``eviction_policy`` (``lru``, or ``belady`` — farthest-next-use,
+    exact under clairvoyance).  The returned object is still a plain
+    ``fetch_fn`` (batch bytes are identical with the tier on or off, for
+    every policy); additionally pass its ``batch_iter`` as the
     pipeline's ``batch_iter_fn`` so the lookahead window re-syncs at
     epoch boundaries.
 
@@ -301,6 +304,7 @@ def store_fetch_fn(
             workers=workers,
             background=prefetch_background,
             max_epochs=max_epochs,
+            policy=eviction_policy,
         )
     if mode == "auto":
         mode = "ragged" if store.variable else "dense"

@@ -19,12 +19,12 @@ TFIPShuffler   TensorFlow input pipeline: sequential reads through a
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Iterator, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.assignment import FeistelAssignment, TableAssignment
+from repro.storage.devices import cache_hit_model
 from repro.storage.record_store import PAGE
 
 
@@ -45,10 +45,13 @@ class IOPlan:
 
     ``cache_hit_fraction`` models a DRAM tier above the device (the
     clairvoyant prefetch subsystem, ``repro.prefetch``): the fraction of
-    an epoch's records served from memory instead of storage.  The
-    random-read fields stay *cache-less* epoch totals — the device model
-    scales both the issued I/Os and the bytes by ``1 − cache_hit_fraction``
-    when pricing, so one plan prices any budget by overriding the field.
+    an epoch's records served from memory instead of storage, under the
+    tier's ``eviction_policy`` (``lru`` or ``belady`` — see
+    ``repro.storage.devices.cache_hit_model`` for the two closed forms).
+    The random-read fields stay *cache-less* epoch totals — the device
+    model scales both the issued I/Os and the bytes by
+    ``1 − cache_hit_fraction`` when pricing, so one plan prices any
+    budget by overriding the field.
     """
 
     preprocess_seq_read_bytes: float = 0.0
@@ -61,6 +64,7 @@ class IOPlan:
     queue_depth: float = 1.0
     mean_record_bytes: float = 0.0
     cache_hit_fraction: float = 0.0
+    eviction_policy: str = "lru"
 
 
 def expected_coalescing_factor(
@@ -177,6 +181,7 @@ class LIRSShuffler:
         queue_depth: float = 1.0,
         cache_budget_bytes: float = 0.0,
         prefetch_window_bytes: float = 0.0,
+        eviction_policy: str = "lru",
     ) -> IOPlan:
         """Price an epoch.  ``coalesce_gap`` (bytes) and ``queue_depth``
         describe the batch-materialization engine: gap-merging shrinks the
@@ -185,45 +190,46 @@ class LIRSShuffler:
         scaling (``StorageModel.t_rand_read``).
 
         ``cache_budget_bytes`` models the DRAM tier (``repro.prefetch``):
-        an LRU record cache of capacity fraction ``c = budget / total``
-        under LIRS's per-epoch uniform permutation.  Every record is
-        reused exactly once per epoch, so a record last touched at epoch
-        position ``q`` and reused at position ``p`` of the next epoch
-        sees ``(n−q) + p·q/n`` distinct records in between (the head of
-        the new permutation overlaps the old tail); it survives LRU iff
-        that is under capacity.  Integrating over uniform ``q, p`` gives
+        a record cache of capacity fraction ``c = budget / total`` under
+        LIRS's per-epoch uniform permutation, with the hit rate given by
+        the ``eviction_policy``'s closed form
+        (:func:`repro.storage.devices.cache_hit_model`):
 
-            hit(c) = c + (1 − c)·ln(1 − c)        (→ 1 as c → 1)
+            lru:     hit(c, λ) = c + (1 − c)·ln(1 − c) + ≈λ·c
+            belady:  hit(c, λ) = c                       (exactly)
 
-        — far below ``c`` for small budgets (the classic LRU scanning
-        pathology: full-range shuffling is adversarial for recency), and
-        exactly what the ``LRUPageCache`` simulator at record granularity
-        and the prefetch benchmark measure.  ``prefetch_window_bytes``
-        is the prefetcher's in-flight working set (pinned lookahead
-        records): it occupies budget without contributing recency hits
-        (admission sees a record *before* its prefetch lands), so LRU
-        retention is the leftover population competing for the leftover
-        slots — ``c = (budget − window) / (total − window)``, which
-        correctly reaches 1 at full coverage, where nothing is ever
-        evicted and pins cost nothing.  The
-        *miss* sub-batch is what the batch engine coalesces, so the
-        coalescing factor is evaluated at the effective batch size
+        LRU sits far below ``c`` for small budgets (the classic scanning
+        pathology: full-range shuffling is adversarial for recency) while
+        Belady — the farthest-next-use rule the clairvoyant tier can run
+        because every future position is known — meets the per-epoch
+        upper bound of one hit per slot.  Both forms are validated
+        against the record-granularity ``LRUPageCache`` /
+        ``BeladyPageCache`` simulators.  ``prefetch_window_bytes`` is the
+        prefetcher's in-flight working set (pinned lookahead records),
+        entering as the window fraction ``λ = window / total``: pins cost
+        no capacity under either policy (the window is the top of the
+        LRU stack, and a subset of what Belady retains by definition),
+        but admission runs λ·n records ahead of demand, which shortens
+        every LRU reuse interval — the λ-correction in
+        :func:`repro.storage.devices.lru_hit_fraction`.  The *miss*
+        sub-batch is what the batch engine coalesces, so the coalescing
+        factor is evaluated at the effective batch size
         ``batch · (1 − hit)``; the device model then scales issued I/Os
         and bytes by the miss fraction.
         """
         plan = IOPlan()
         plan.mean_record_bytes = self.avg_instance_bytes
+        plan.eviction_policy = eviction_policy
         if is_sparse:  # offset-table scan (Fig 7b)
             plan.preprocess_seq_read_bytes = total_bytes
         hit = 0.0
         if cache_budget_bytes > 0 and total_bytes > 0:
-            w = min(prefetch_window_bytes, cache_budget_bytes, total_bytes)
-            c = min(
-                1.0,
-                max(0.0, cache_budget_bytes - w)
-                / max(1.0, total_bytes - w),
+            c = min(1.0, cache_budget_bytes / total_bytes)
+            lam = (
+                min(prefetch_window_bytes, cache_budget_bytes, total_bytes)
+                / total_bytes
             )
-            hit = 1.0 if c >= 1.0 else c + (1.0 - c) * math.log1p(-c)
+            hit = cache_hit_model(c, eviction_policy, window_frac=lam)
         plan.cache_hit_fraction = hit
         if self.page_aware:
             n_ios = len(self.page_groups)

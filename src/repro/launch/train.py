@@ -50,6 +50,11 @@ def build_argparser():
                     help="DRAM tier budget in MiB (0 = no tiered read path)")
     ap.add_argument("--prefetch-lookahead", type=int, default=8,
                     help="batches the clairvoyant prefetcher plans ahead")
+    ap.add_argument("--eviction-policy", default="belady",
+                    choices=["lru", "belady"],
+                    help="DRAM tier eviction: lru (recency) or belady "
+                         "(farthest next use — exact under the known "
+                         "LIRS permutation, the default)")
     return ap
 
 
@@ -93,6 +98,7 @@ def main(argv=None):
             lookahead=args.prefetch_lookahead,
             workers=args.io_workers,
             max_epochs=args.epochs,
+            eviction_policy=args.eviction_policy,
         )
         batch_iter_fn = fetcher.batch_iter
 
@@ -132,12 +138,16 @@ def main(argv=None):
     if fetcher is not None:
         fetcher.close()
         summary["cache"] = {
+            "policy": fetcher.cache.policy,
             "budget_bytes": fetcher.cache.budget_bytes,
             "used_bytes": fetcher.cache.used_bytes,
             "demand_hits": fetcher.cache.hits,
             "demand_misses": fetcher.cache.misses,
             "window_hits": fetcher.scheduler.window_hits,
             "prefetched_records": fetcher.prefetch_records,
+            "rejected_inserts": fetcher.cache.rejected,
+            "stray_unpins": fetcher.cache.stray_unpins,
+            "scratch_copies": fetcher.cache.scratch_copies,
         }
     print(json.dumps(summary, indent=1))
     return summary

@@ -8,13 +8,19 @@ storage:
 
 * :class:`~repro.prefetch.cache.TieredCache` — a byte-budgeted DRAM tier
   holding record payloads in a slot arena, served and filled with
-  vectorized gathers (no per-record Python), evicted LRU-by-batch with
-  known-reuse pinning: records that reappear within the lookahead window
-  are never evicted.
+  vectorized gathers (no per-record Python), with known-reuse pinning:
+  records that reappear within the lookahead window are never evicted.
+  Eviction is policy-selectable — LRU-by-batch, or Belady's
+  farthest-next-use rule, which is *exact* here because the scheduler
+  knows every future position (hit rate ``c`` vs LRU's
+  ``c + (1−c)·ln(1−c)`` at capacity fraction ``c``).
 * :class:`~repro.prefetch.scheduler.LookaheadScheduler` — walks the
   shuffler's future index stream N batches ahead (across epoch
   boundaries) and emits deduplicated prefetch plans: a record already
   resident or already planned inside the window is never fetched twice.
+  As served batches retire it prices every record's next use from the
+  next epoch's inverse permutation and feeds it to the cache — the
+  Belady priority.
 * :class:`~repro.prefetch.fetcher.PrefetchingFetcher` — an
   ``InputPipeline`` ``fetch_fn`` drop-in (dense and ragged) whose
   background worker executes plans through the store's GIL-releasing
@@ -22,11 +28,12 @@ storage:
   serves resident records at DRAM speed.  Batch bytes are identical with
   prefetch on or off, for any producer count.
 """
-from repro.prefetch.cache import TieredCache, copy_records
+from repro.prefetch.cache import NEVER, TieredCache, copy_records
 from repro.prefetch.fetcher import PrefetchingFetcher
 from repro.prefetch.scheduler import LookaheadScheduler, PrefetchPlan
 
 __all__ = [
+    "NEVER",
     "TieredCache",
     "copy_records",
     "LookaheadScheduler",

@@ -4,18 +4,27 @@ The cache is a *slot arena*: ``capacity`` fixed-width slots in one
 preallocated uint8 matrix, where slot width is the store's largest record
 payload.  ``capacity * slot_bytes`` never exceeds the byte budget, so the
 budget bounds resident bytes by construction.  All bookkeeping is NumPy
-arrays indexed by record id — residency, LRU ticks, pin counts — so a
-4096-record batch is served, filled, or evicted with a handful of
-vectorized passes and zero per-record Python, matching the batch
-engines' performance discipline (a dict-of-bytes cache would hand the
-per-record cost the arena engines eliminated right back).
+arrays indexed by record id — residency, LRU ticks, next-use positions,
+pin counts — so a 4096-record batch is served, filled, or evicted with a
+handful of vectorized passes and zero per-record Python, matching the
+batch engines' performance discipline (a dict-of-bytes cache would hand
+the per-record cost the arena engines eliminated right back).
 
-Eviction is LRU **by batch**: every gather/insert advances one logical
-tick shared by all records it touched, and eviction takes the unpinned
-residents with the smallest tick.  Pinning is how the clairvoyant
-scheduler injects known reuse distance: records inside the lookahead
-window (i.e. about to be used) carry a pin count and are never evicted,
-no matter how stale their tick.
+Eviction is policy-selectable:
+
+* ``lru`` — LRU **by batch**: every gather/insert advances one logical
+  tick shared by all records it touched, and eviction takes the unpinned
+  residents with the smallest tick.
+* ``belady`` — farthest-next-use (Belady's MIN): eviction takes the
+  unpinned residents with the *largest* ``next_use`` stream position — a
+  vectorized argmax/argpartition over the candidates, heap-free.  The
+  positions come from the clairvoyant scheduler, which knows every future
+  use because LIRS permutes indexes (``note_next_use``); a record whose
+  next use is unknown carries ``NEVER`` and is evicted first.
+
+Pinning is orthogonal to the policy: records inside the lookahead window
+(i.e. about to be used) carry a pin count and are never evicted, no
+matter how stale their tick or how far their next use.
 
 Thread safety: one lock around every public method.  Gathers copy out
 under the lock, so a concurrent insert/evict can never recycle a slot
@@ -27,6 +36,12 @@ import threading
 from typing import Optional
 
 import numpy as np
+
+from repro.storage.devices import EVICTION_POLICIES
+
+# "no known future use": sorts after every real stream position, so
+# unknown records are the first Belady victims
+NEVER = np.iinfo(np.int64).max
 
 
 def copy_records(
@@ -58,7 +73,9 @@ class TieredCache:
     sides agree on byte counts.  ``budget_bytes`` caps the arena:
     ``nbytes <= budget_bytes`` always, and a budget smaller than one slot
     degenerates to a 0-capacity cache that misses everything (still
-    byte-identical behaviour, just no hits).
+    byte-identical behaviour, just no hits).  ``policy`` selects the
+    eviction rule (``lru`` or ``belady``); batch bytes are identical
+    either way — only *which* records stay resident changes.
     """
 
     def __init__(
@@ -66,9 +83,15 @@ class TieredCache:
         record_lengths: np.ndarray,
         budget_bytes: int,
         slot_bytes: Optional[int] = None,
+        policy: str = "lru",
     ):
+        if policy not in EVICTION_POLICIES:
+            raise ValueError(
+                f"policy must be one of {EVICTION_POLICIES}, got {policy!r}"
+            )
         lengths = np.asarray(record_lengths, np.int64)
         self.record_lengths = lengths
+        self.policy = policy
         n = len(lengths)
         if slot_bytes is None:
             slot_bytes = int(lengths.max()) if n else 1
@@ -81,6 +104,10 @@ class TieredCache:
         self._free = list(range(self.capacity))
         self._pin = np.zeros(n, np.int32)
         self._last_used = np.zeros(n, np.int64)
+        # record id -> stream position of its next use (Belady priority);
+        # written by the scheduler's retirement bookkeeping, read at
+        # eviction time.  LRU caches never consult it.
+        self.next_use = np.full(n, NEVER, np.int64)
         self._tick = 0
         self._used_bytes = 0
         self._lock = threading.Lock()
@@ -91,6 +118,13 @@ class TieredCache:
         self.insertions = 0
         self.evictions = 0
         self.rejected = 0  # inserts dropped because every victim was pinned
+        self.stray_unpins = 0  # unpins without a matching pin (a pairing bug)
+        # copies the serve path routed through an intermediate buffer
+        # instead of the final destination (ring slot / caller buffer) —
+        # the zero-copy handoff keeps these at 0 for fully-resident and
+        # fully-missed batches
+        self.scratch_copies = 0
+        self.scratch_copy_bytes = 0
 
     # ---------------------------------------------------------- introspect
     @property
@@ -125,11 +159,37 @@ class TieredCache:
         with self._lock:
             ids = np.asarray(ids, np.int64)
             np.add.at(self._pin, ids, -1)
-            np.maximum(self._pin, 0, out=self._pin)  # tolerate stray unpins
+            uniq = np.unique(ids)
+            counts = self._pin[uniq]
+            stray = -int(counts[counts < 0].sum())
+            if stray:
+                # an unpin with no matching pin is a window-accounting bug
+                # (retiring a batch twice, or unpinning a foreign id):
+                # clamping silently would let eviction take records another
+                # window still relies on — count it so tests can assert 0
+                self.stray_unpins += stray
+                self._pin[uniq] = np.maximum(counts, 0)
 
     def pinned(self, ids: np.ndarray) -> np.ndarray:
         with self._lock:
             return self._pin[np.asarray(ids, np.int64)] > 0
+
+    def note_next_use(self, ids: np.ndarray, positions):
+        """Record the absolute stream position of each id's next use (the
+        Belady eviction priority).  ``positions`` may be scalar
+        (broadcast) or per-id; the scheduler calls this as the lookahead
+        window retires batches, so priorities are exact under
+        clairvoyance rather than estimated."""
+        with self._lock:
+            self.next_use[np.asarray(ids, np.int64)] = positions
+
+    # ---------------------------------------------------------- accounting
+    def account_scratch_copy(self, nbytes: int):
+        """The serve path copied ``nbytes`` through an intermediate buffer
+        (cache→scratch→destination instead of straight to the ring slot)."""
+        with self._lock:
+            self.scratch_copies += 1
+            self.scratch_copy_bytes += int(nbytes)
 
     # ------------------------------------------------------------- gather
     def gather(
@@ -208,7 +268,9 @@ class TieredCache:
             return k
 
     def _evict_locked(self, m: int):
-        """Drop up to ``m`` unpinned residents with the oldest ticks."""
+        """Drop up to ``m`` unpinned residents: the oldest ticks under
+        ``lru``, the farthest (largest) ``next_use`` under ``belady`` —
+        one argpartition over the candidate array either way."""
         occupied = np.flatnonzero(self._id_of >= 0)
         cand_ids = self._id_of[occupied]
         unpinned = self._pin[cand_ids] == 0
@@ -216,7 +278,11 @@ class TieredCache:
         if len(cand_ids) == 0:
             return
         if len(cand_ids) > m:
-            pick = np.argpartition(self._last_used[cand_ids], m - 1)[:m]
+            if self.policy == "belady":
+                key = -self.next_use[cand_ids]  # farthest next use first
+            else:
+                key = self._last_used[cand_ids]  # oldest tick first
+            pick = np.argpartition(key, m - 1)[:m]
             occupied, cand_ids = occupied[pick], cand_ids[pick]
         self._slot_of[cand_ids] = -1
         self._id_of[occupied] = -1

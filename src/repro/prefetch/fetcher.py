@@ -72,6 +72,7 @@ class PrefetchingFetcher:
         start_epoch: int = 0,
         max_epochs: Optional[int] = None,
         cache: Optional[TieredCache] = None,
+        policy: str = "lru",
     ):
         if mode == "auto":
             mode = "ragged" if store.variable else "dense"
@@ -89,7 +90,7 @@ class PrefetchingFetcher:
         self.cache = (
             cache
             if cache is not None
-            else TieredCache(store.lengths(), budget_bytes)
+            else TieredCache(store.lengths(), budget_bytes, policy=policy)
         )
         self.scheduler = LookaheadScheduler(
             shuffler,
@@ -223,18 +224,29 @@ class PrefetchingFetcher:
         try:
             dst_off = np.arange(b, dtype=np.int64) * rs
             hit = self.cache.gather(idx, out.reshape(-1), dst_off)
+            nh = int(hit.sum())
             miss = ~hit
-            if miss.any():
+            if nh == 0:
+                # zero-copy handoff, miss side: nothing resident (cold
+                # epoch / 0-budget tier) — read storage straight into the
+                # destination (ring) buffer, no tmp batch + row copy
+                self.store.read_batch_into(
+                    idx, out=out, gap_bytes=self.gap_bytes, workers=self.workers
+                )
+                self.cache.insert(idx, out.reshape(-1), dst_off)
+            elif miss.any():
                 tmp = self.store.read_batch_into(
                     idx[miss], gap_bytes=self.gap_bytes, workers=self.workers
                 )
+                self.cache.account_scratch_copy(tmp.nbytes)
                 out[miss] = tmp
                 self.cache.insert(
                     idx[miss],
                     tmp.reshape(-1),
                     np.arange(len(tmp), dtype=np.int64) * rs,
                 )
-            nh = int(hit.sum())
+            # fully-resident batches take the hit side of the handoff:
+            # one gather, cache arena → ring slot, zero scratch copies
             if nh:
                 self.store.stats.account_cache_hits(nh, nh * rs)
             return out
@@ -253,16 +265,27 @@ class PrefetchingFetcher:
         try:
             dst_off = out_off.astype(np.int64)
             hit = self.cache.gather(idx, arena, dst_off)
+            nh = int(hit.sum())
             miss = ~hit
-            if miss.any():
+            if nh == 0:
+                # zero-copy handoff (see _serve_dense): the extent gather
+                # materializes directly into the ring arena
+                self.store.read_batch_ragged(
+                    idx,
+                    gap_bytes=self.gap_bytes,
+                    workers=self.workers,
+                    out=(arena, out_off, out_len),
+                )
+                self.cache.insert(idx, arena, dst_off)
+            elif miss.any():
                 rb = self.store.read_batch_ragged(
                     idx[miss], gap_bytes=self.gap_bytes, workers=self.workers
                 )
+                self.cache.account_scratch_copy(rb.arena.nbytes)
                 copy_records(
                     rb.arena, rb.offsets, arena, dst_off[miss], rb.lengths
                 )
                 self.cache.insert(idx[miss], rb.arena, rb.offsets)
-            nh = int(hit.sum())
             if nh:
                 self.store.stats.account_cache_hits(
                     nh, int(lens[hit].sum())

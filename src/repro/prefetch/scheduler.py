@@ -24,11 +24,11 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from repro.prefetch.cache import TieredCache
+from repro.prefetch.cache import NEVER, TieredCache
 
 
 def batch_key(batch: np.ndarray) -> Tuple[int, ...]:
@@ -85,6 +85,19 @@ class LookaheadScheduler:
             self._lengths = None
         # per-record membership count of the current window (dedup + pins)
         self._window_count = np.zeros(shuffler.num_items, np.int32)
+        # Belady bookkeeping: when the cache evicts farthest-next-use, the
+        # scheduler feeds it exact next-use stream positions — LIRS's
+        # clairvoyance means they are *known*, not estimated.  A record's
+        # next use after being served in epoch e is its position in epoch
+        # e+1's index stream; one inverse-permutation array per epoch
+        # (cached, pruned as the window moves on) prices every retirement
+        # with a single vectorized take.
+        self._track_next_use = (
+            cache is not None
+            and getattr(cache, "policy", "lru") == "belady"
+            and hasattr(shuffler, "epoch_index_stream")
+        )
+        self._epoch_pos: Dict[int, np.ndarray] = {}
         self._pinned = 0       # distinct records currently pinned, summed
         self._pending: Optional[Tuple[int, int, np.ndarray]] = None
         self.primed = False
@@ -208,11 +221,34 @@ class LookaheadScheduler:
             plans.append(self._admit_item(epoch, seq, batch, uniq))
         return plans
 
-    def _retire(self, key: Optional[Tuple[int, ...]] = None):
+    def _next_epoch_pos(self, epoch: int) -> Optional[np.ndarray]:
+        """Inverse position table of ``epoch``'s index stream
+        (``pos[record] = position within the epoch``), or ``None`` when
+        the stream never reaches that epoch.  Cached per epoch; stale
+        epochs are pruned so at most a handful of tables are live."""
+        if self.max_epochs is not None and epoch >= self.max_epochs:
+            return None
+        tbl = self._epoch_pos.get(epoch)
+        if tbl is None:
+            stream = np.asarray(
+                self.shuffler.epoch_index_stream(epoch), np.int64
+            )
+            tbl = np.empty(self.shuffler.num_items, np.int64)
+            tbl[stream] = np.arange(len(stream), dtype=np.int64)
+            self._epoch_pos[epoch] = tbl
+            for e in [e for e in self._epoch_pos if e < epoch - 2]:
+                del self._epoch_pos[e]
+        return tbl
+
+    def _retire(
+        self, key: Optional[Tuple[int, ...]] = None, served: bool = True
+    ):
         """Retire the window entry matching ``key`` (the batch that was
         actually served — under multi-producer pipelines fetches complete
         out of order, and retiring the head would unpin a *different*,
-        still-unserved batch); no match or no key retires the head."""
+        still-unserved batch); no match or no key retires the head.
+        ``served=False`` (a :meth:`reset`) skips the next-use update: the
+        batch was abandoned, its records were not consumed."""
         if not self._window:
             return
         pos = 0
@@ -221,12 +257,21 @@ class LookaheadScheduler:
                 if entry[3] == key:
                     pos = j
                     break
-        _, _, uniq, _ = self._window[pos]
+        epoch, _, uniq, _ = self._window[pos]
         del self._window[pos]
         self._window_count[uniq] -= 1
         self._pinned -= len(uniq)
         if self.cache is not None:
             self.cache.unpin(uniq)
+            if served and self._track_next_use:
+                # the batch's records were just used; each one's next use
+                # is its (known) position in the next epoch's permutation
+                tbl = self._next_epoch_pos(epoch + 1)
+                n = self.shuffler.num_items
+                self.cache.note_next_use(
+                    uniq,
+                    NEVER if tbl is None else (epoch + 1) * n + tbl[uniq],
+                )
 
     def fill(self) -> List[PrefetchPlan]:
         """Prime the window; returns the new plans in admission order."""
@@ -257,9 +302,20 @@ class LookaheadScheduler:
         at ``(epoch, 0)``.  Cache contents survive — only planning state
         resets."""
         while self._window:
-            self._retire()
+            self._retire(served=False)
         self._window_count[:] = 0
         self._pinned = 0
         self._pending = None
+        self._epoch_pos.clear()
+        if self._track_next_use:
+            # next-use positions are absolute coordinates of the *old*
+            # stream; replaying an epoch restarts the coordinate system,
+            # and stale far-future values would make records with
+            # imminent uses look like the best victims.  NEVER = "prove
+            # your next use again" — each record re-prices at its first
+            # post-reset retirement
+            self.cache.note_next_use(
+                np.arange(self.shuffler.num_items, dtype=np.int64), NEVER
+            )
         self._stream = self._gen(epoch)
         self.primed = False

@@ -5,5 +5,9 @@ from repro.storage.record_store import (  # noqa: F401
     RecordStore,
     RecordWriter,
 )
-from repro.storage.devices import STORAGE_MODELS, StorageModel  # noqa: F401
-from repro.storage.page_cache import LRUPageCache  # noqa: F401
+from repro.storage.devices import (  # noqa: F401
+    STORAGE_MODELS,
+    StorageModel,
+    cache_hit_model,
+)
+from repro.storage.page_cache import BeladyPageCache, LRUPageCache  # noqa: F401

@@ -8,9 +8,98 @@ drive the I/O simulator used by the training-time benchmarks.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 PAGE = 4096
+
+EVICTION_POLICIES = ("lru", "belady")
+
+
+def lru_hit_fraction(c: float, window_frac: float = 0.0) -> float:
+    """Steady-state hit rate of an LRU record cache holding a capacity
+    fraction ``c`` of the dataset, under LIRS's per-epoch uniform
+    permutation (every record reused exactly once per epoch).
+
+    A record last used at epoch position ``q`` and reused at position
+    ``p`` of the next epoch sees ``(n−q) + p·q/n`` distinct records in
+    between; it survives LRU iff that is under capacity.  Integrating
+    over uniform ``q, p``:
+
+        hit(c) = c + (1 − c)·ln(1 − c)          (→ 1 as c → 1)
+
+    — far below ``c`` for small budgets: full-range shuffling is the
+    classic LRU scanning pathology, recency carries no signal.
+
+    ``window_frac`` = λ models a clairvoyant prefetcher running λ·n
+    records ahead of demand (the pinned lookahead window).  Pins cost no
+    capacity — the window is the most recently touched set, the top of
+    the LRU stack, retained by recency anyway — but admission *shortens*
+    every reuse interval by λ·n (a record is readmitted, and counts as a
+    hit, λ·n accesses before its use), so the survival condition becomes
+    ``(1−x) + max(0, y−λ)·x < c``.  Integrating:
+
+        hit(c, λ) = (λ+1)·(x* − x₀) − x₀·ln(x*/x₀) + max(0, 1 − x*)
+
+    with ``x₀ = 1 − c`` and ``x* = min(1, x₀/λ)``; λ = 0 recovers the
+    classic form, and for small λ the correction is ``≈ λ·c``.
+    """
+    c = min(1.0, max(0.0, c))
+    if c >= 1.0:
+        return 1.0
+    if c <= 0.0:
+        return 0.0
+    lam = max(0.0, window_frac)
+    if lam == 0.0:
+        return c + (1.0 - c) * math.log1p(-c)
+    x0 = 1.0 - c
+    xs = min(1.0, x0 / lam)
+    h = (lam + 1.0) * (xs - x0) - x0 * (math.log(xs) - math.log(x0))
+    return min(1.0, h + max(0.0, 1.0 - xs))
+
+
+def belady_hit_fraction(c: float, window_frac: float = 0.0) -> float:
+    """Steady-state hit rate of a Belady (farthest-next-use) record cache
+    of capacity fraction ``c`` under the same permutation stream:
+
+        hit(c) = c                              (exactly)
+
+    Every reuse interval spans exactly one epoch boundary (a record's
+    next use is always in the *next* epoch), so at most ``capacity``
+    retained intervals can straddle any boundary — no policy can serve
+    more than ``capacity`` hits per epoch.  Belady attains the bound:
+    a resident not yet used this epoch has an earlier next use than any
+    already-used (waiting) record, so farthest-next-use eviction only
+    ever takes waiting records and every epoch-start resident survives
+    to its use.  Exactly ``capacity`` hits per epoch, from the second
+    epoch on — linear in budget where LRU collapses quadratically.
+
+    ``window_frac`` is accepted for signature parity and ignored: the
+    pinned lookahead window is a *subset* of what farthest-next-use
+    retains anyway (the soonest next uses are, by definition, the records
+    about to be demanded), so the prefetch working set costs Belady no
+    retention capacity at all.
+    """
+    del window_frac
+    return min(1.0, max(0.0, c))
+
+
+def cache_hit_model(
+    c: float, policy: str = "lru", window_frac: float = 0.0
+) -> float:
+    """Closed-form DRAM-tier hit rate at capacity fraction ``c`` for the
+    given eviction ``policy`` (``repro.prefetch``'s ``TieredCache``) with
+    a prefetch lookahead window of ``window_frac`` of the dataset pinned,
+    validated against the record-granularity ``LRUPageCache`` /
+    ``BeladyPageCache`` simulators in ``repro.storage.page_cache`` and
+    against the live tier in ``benchmarks/prefetch.py``."""
+    if policy == "lru":
+        return lru_hit_fraction(c, window_frac)
+    if policy == "belady":
+        return belady_hit_fraction(c, window_frac)
+    raise ValueError(
+        f"eviction policy must be one of {EVICTION_POLICIES}, got {policy!r}"
+    )
 
 
 @dataclass(frozen=True)

@@ -1,15 +1,27 @@
-"""LRU page-cache simulator.
+"""LRU and Belady (clairvoyant) cache simulators.
 
-Models the host main-memory page cache the paper reasons about in §4.1
-(page-aware shuffling): when instance_size < page size and instances are
-fetched in random order, most of each loaded page is evicted unused and
-later re-fetched — redundant page transfers.  The simulator counts those
-transfers so Fig 11 reproduces without real block devices.
+``LRUPageCache`` models the host main-memory page cache the paper reasons
+about in §4.1 (page-aware shuffling): when instance_size < page size and
+instances are fetched in random order, most of each loaded page is evicted
+unused and later re-fetched — redundant page transfers.  The simulator
+counts those transfers so Fig 11 reproduces without real block devices.
+
+``BeladyPageCache`` is its clairvoyant sibling: same demand-fill cache,
+but eviction takes the resident with the *farthest next use* — computable
+offline because the whole access stream is known, which is exactly the
+situation LIRS puts the DRAM tier in (the epoch order is a known
+permutation).  Both run at any granularity; the prefetch subsystem's
+closed forms (``repro.storage.devices.cache_hit_model``) are validated
+against them at *record* granularity over real shuffler index streams.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Iterable
+from typing import Iterable, Sequence
+
+import numpy as np
+
+_NEVER = np.iinfo(np.int64).max
 
 
 class LRUPageCache:
@@ -38,6 +50,18 @@ class LRUPageCache:
             self.access(p)
         return self.misses - m0
 
+    def simulate(self, stream: Sequence[int], warmup: int = 0) -> float:
+        """Run the whole ``stream``; count hits/misses only for accesses
+        at position ≥ ``warmup`` (steady-state measurement).  Returns the
+        measured hit rate over the counted tail."""
+        for t, p in enumerate(stream):
+            hit = self.access(int(p))
+            if t < warmup:  # warm-up accesses populate but don't count
+                self.hits -= int(hit)
+                self.misses -= int(not hit)
+        tail = self.hits + self.misses
+        return self.hits / tail if tail else 0.0
+
     @property
     def transfers(self) -> int:
         """Pages moved storage -> memory (i.e. misses)."""
@@ -45,4 +69,76 @@ class LRUPageCache:
 
     def reset(self):
         self._lru.clear()
+        self.hits = self.misses = 0
+
+
+class BeladyPageCache:
+    """Demand-fill cache with Belady's MIN eviction (farthest next use).
+
+    Clairvoyance means eviction needs the *future* of the stream, so the
+    API is offline: :meth:`simulate` takes the whole access sequence,
+    derives each access's next-occurrence time with one backward pass,
+    and replays it — on a miss the resident whose next use is farthest
+    (``_NEVER`` for never-again) is evicted, via a vectorized argmax over
+    a dense per-id next-use array (no heap).  Counters mirror
+    :class:`LRUPageCache` so the two simulators are drop-in comparable
+    on the same stream.
+    """
+
+    def __init__(self, capacity_pages: int):
+        assert capacity_pages > 0
+        self.capacity = capacity_pages
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def next_use_times(stream: np.ndarray) -> np.ndarray:
+        """``out[t]`` = position of the next occurrence of ``stream[t]``
+        after ``t`` (``_NEVER`` when there is none).  One vectorized
+        backward scan per distinct id, O(T) total."""
+        stream = np.asarray(stream, np.int64)
+        t_len = len(stream)
+        out = np.full(t_len, _NEVER, np.int64)
+        if t_len == 0:
+            return out
+        # group positions by id: for each id's sorted positions p0<p1<…,
+        # out[p_i] = p_{i+1}
+        order = np.argsort(stream, kind="stable")
+        sid = stream[order]
+        same_next = sid[:-1] == sid[1:]
+        out[order[:-1][same_next]] = order[1:][same_next]
+        return out
+
+    def simulate(self, stream: Sequence[int], warmup: int = 0) -> float:
+        """Replay ``stream`` under MIN; count only accesses at position
+        ≥ ``warmup``.  Returns the measured hit rate over the tail.
+        Residency carries over between calls is NOT supported — each call
+        is a fresh offline run (clairvoyance is per-stream)."""
+        stream = np.asarray(stream, np.int64)
+        nxt = self.next_use_times(stream)
+        n_ids = int(stream.max()) + 1 if len(stream) else 0
+        resident_next = np.full(n_ids, -1, np.int64)  # -1 = absent
+        count = 0
+        for t in range(len(stream)):
+            x = stream[t]
+            hit = resident_next[x] >= 0
+            if t >= warmup:
+                self.hits += int(hit)
+                self.misses += int(not hit)
+            resident_next[x] = nxt[t]
+            if not hit:
+                count += 1
+                if count > self.capacity:
+                    cand = np.flatnonzero(resident_next >= 0)
+                    victim = cand[np.argmax(resident_next[cand])]
+                    resident_next[victim] = -1
+                    count -= 1
+        tail = self.hits + self.misses
+        return self.hits / tail if tail else 0.0
+
+    @property
+    def transfers(self) -> int:
+        return self.misses
+
+    def reset(self):
         self.hits = self.misses = 0

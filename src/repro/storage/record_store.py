@@ -611,6 +611,7 @@ class RecordStore:
         gap_bytes: int = PAGE,
         workers: int = 1,
         ring: Optional["RaggedBufferRing"] = None,
+        out: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
     ) -> RaggedBatch:
         """Coalesced batch read of variable-length records into ONE arena.
 
@@ -629,6 +630,14 @@ class RecordStore:
         arena triples in steady state; the caller must be done with the
         previous batch before recycling it (the pipeline's ``recycle_fn``
         contract).
+
+        Pass ``out`` — an ``(arena, offsets, lengths)`` triple sized by
+        :func:`alloc_ragged` for exactly these indices — to materialize
+        into a caller-owned destination instead (the tiered read path's
+        zero-copy ring handoff).  The triple's packing is (re)derived from
+        the store's lengths, the caller keeps ownership on failure
+        (``ring`` must not also be given), and the returned
+        :class:`RaggedBatch` wraps the same buffers.
         """
         idx = np.asarray(indices, dtype=np.int64)
         b = len(idx)
@@ -640,7 +649,30 @@ class RecordStore:
         else:
             offs = np.empty(0, np.int64)
             lens = np.empty(0, np.int64)
-        arena, out_off, out_len = alloc_ragged(lens, ring)
+        if out is not None:
+            if ring is not None:
+                raise ValueError("pass either ring= or out=, not both")
+            arena, out_off, out_len = out
+            total = int(lens.sum())
+            if arena.size != total or len(out_off) != b or len(out_len) != b:
+                raise ValueError(
+                    f"out triple sized ({arena.size}, {len(out_off)}, "
+                    f"{len(out_len)}), batch needs ({total}, {b}, {b})"
+                )
+            if arena.dtype != np.uint8 or not arena.flags.c_contiguous:
+                raise ValueError(
+                    f"out arena must be C-contiguous uint8, got "
+                    f"{arena.dtype}"
+                )
+            if b:
+                # re-derive the packing rule so a stale/foreign triple
+                # cannot silently scatter records to wrong offsets
+                out_len[:] = lens
+                out_off[0] = 0
+                if b > 1:
+                    out_off[1:] = np.cumsum(lens[:-1])
+        else:
+            arena, out_off, out_len = alloc_ragged(lens, ring)
         if b == 0:
             return RaggedBatch(arena, out_off, out_len)
         try:

@@ -10,3 +10,19 @@ if SRC not in sys.path:
 # keep tests single-device and quiet (the dry-run process forces 512
 # devices separately; tests must see the real 1-CPU platform)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Deterministic hypothesis defaults for the property suites (eviction
+# policy, ragged engine, prefetch): no deadline — shared CI runners make
+# wall-clock flaky — and derandomized example generation, so a CI failure
+# reproduces locally from the test id alone.  Machines without hypothesis
+# fall back to tests/_hypo's fixed-seed shim, which is deterministic by
+# construction.
+try:
+    from hypothesis import settings as _hypo_settings
+
+    _hypo_settings.register_profile(
+        "repro", deadline=None, derandomize=True, print_blob=True
+    )
+    _hypo_settings.load_profile("repro")
+except ModuleNotFoundError:
+    pass

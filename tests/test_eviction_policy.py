@@ -1,0 +1,498 @@
+"""Eviction policy (LRU vs Belady) contracts: policy vs simulator vs model.
+
+Property-tested over random (n_records, budget, batch, lookahead) configs
+(via tests/_hypo — hypothesis when installed, deterministic shim
+otherwise):
+
+  a) the Belady simulator's hit rate is never below the LRU simulator's
+     on the same index stream (MIN optimality, checked empirically);
+  b) ``IOPlan.cache_hit_fraction(policy=...)`` matches each simulator
+     within tolerance — LRU's ``c + (1−c)·ln(1−c)`` and Belady's exact
+     ``c`` (one hit per slot per epoch, the pigeonhole bound);
+  c) batch bytes are byte-identical across {off, lru, belady} ×
+     {dense, ragged} × producer counts over 3 epochs — the eviction
+     policy may only change *which* records stay resident, never a
+     single served byte.
+
+Plus the zero-copy ring handoff regressions: a fully-resident (and a
+fully-missed) batch moves through exactly one copy into the ring slot —
+``TieredCache.scratch_copies`` stays 0 — and recycled ring slots are
+never aliased by an in-flight gather.  And the stray-unpin fix: unpins
+without a matching pin are counted, and the scheduler never produces one.
+"""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import InputPipeline, store_fetch_fn
+from repro.core.shuffler import LIRSShuffler
+from repro.prefetch import NEVER, PrefetchingFetcher, TieredCache
+from repro.storage.devices import cache_hit_model
+from repro.storage.page_cache import BeladyPageCache, LRUPageCache
+from repro.storage.record_store import (
+    BatchBufferRing,
+    RaggedBufferRing,
+    RecordStore,
+    RecordWriter,
+)
+from tests._hypo import given, settings, st
+
+
+# ----------------------------------------------------------------- stores
+@pytest.fixture(scope="module")
+def fixed_store(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("ev") / "fixed.rrec")
+    rng = np.random.default_rng(17)
+    recs = [rng.bytes(64) for _ in range(400)]
+    with RecordWriter(path, record_size=64) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    yield store, recs
+    store.close()
+
+
+@pytest.fixture(scope="module")
+def variable_store(tmp_path_factory):
+    from repro.core.location import LocationGenerator
+
+    path = str(tmp_path_factory.mktemp("ev") / "var.rrec")
+    rng = np.random.default_rng(18)
+    recs = [rng.bytes(int(rng.integers(4, 80))) for _ in range(400)]
+    with RecordWriter(path) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    LocationGenerator().generate(store)
+    yield store, recs
+    store.close()
+
+
+def _stream(n, batch, seed, epochs):
+    sh = LIRSShuffler(n, batch, seed=seed)
+    return np.concatenate([sh.epoch_index_stream(e) for e in range(epochs)])
+
+
+# ------------------------------------------- (a) policy vs policy (sim)
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(256, 2048),
+    batch=st.integers(16, 256),
+    frac_pct=st.integers(3, 97),
+    seed=st.integers(0, 1000),
+)
+def test_belady_simulator_never_below_lru_on_same_stream(
+    n, batch, frac_pct, seed
+):
+    """MIN optimality, empirically: on the same LIRS index stream with the
+    same capacity, clairvoyant eviction never loses to recency."""
+    k = max(1, (n * frac_pct) // 100)
+    stream = _stream(n, min(batch, n), seed, epochs=4)
+    warm = 3 * n
+    h_bel = BeladyPageCache(k).simulate(stream, warmup=warm)
+    h_lru = LRUPageCache(k).simulate(stream, warmup=warm)
+    assert h_bel >= h_lru
+
+
+# ------------------------------------------- (b) model vs simulator
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(1500, 3500),
+    batch=st.integers(32, 512),
+    frac_pct=st.integers(5, 95),
+    seed=st.integers(0, 100),
+)
+def test_closed_forms_match_record_simulators(n, batch, frac_pct, seed):
+    """`io_plan(eviction_policy=...)`'s closed forms against the two
+    record-granularity simulators on real permutation streams: steady
+    state is measured on epoch 4 after 3 warm-up epochs."""
+    rec_bytes = 32
+    k = max(1, (n * frac_pct) // 100)
+    c = k / n
+    sh = LIRSShuffler(n, min(batch, n), seed=seed, avg_instance_bytes=rec_bytes)
+    stream = np.concatenate([sh.epoch_index_stream(e) for e in range(4)])
+    warm = 3 * n
+    total = float(n * rec_bytes)
+    for policy, sim_cls in (("lru", LRUPageCache), ("belady", BeladyPageCache)):
+        plan = sh.io_plan(
+            total,
+            is_sparse=False,
+            cache_budget_bytes=k * rec_bytes,
+            eviction_policy=policy,
+        )
+        assert plan.cache_hit_fraction == pytest.approx(
+            cache_hit_model(c, policy)
+        )
+        measured = sim_cls(k).simulate(stream, warmup=warm)
+        if policy == "belady":
+            # exactly one hit per slot per epoch, from epoch 2 on
+            assert measured == pytest.approx(c, abs=1.5 / n)
+        else:
+            assert abs(measured - plan.cache_hit_fraction) <= max(
+                0.02, 0.12 * plan.cache_hit_fraction
+            )
+
+
+def test_belady_sim_serves_exactly_capacity_hits_per_epoch():
+    """The pigeonhole bound is met with equality: k hits per epoch."""
+    n, k = 1024, 300
+    stream = _stream(n, 64, seed=3, epochs=3)
+    sim = BeladyPageCache(k)
+    sim.simulate(stream, warmup=2 * n)  # count epoch 3 only
+    assert sim.hits == k
+    assert sim.misses == n - k
+
+
+def test_next_use_times_backward_scan():
+    stream = np.array([3, 1, 3, 2, 1, 3])
+    nxt = BeladyPageCache.next_use_times(stream)
+    big = np.iinfo(np.int64).max
+    np.testing.assert_array_equal(nxt, [2, 4, 5, big, big, big])
+
+
+# ------------------------------------------- (c) byte identity across policies
+def _epoch_bytes(pipe, epochs):
+    out = []
+    for e in range(epochs):
+        for item in pipe.epoch(e):
+            if isinstance(item, np.ndarray):
+                out.append(bytes(item.reshape(-1)))
+            else:  # RaggedBatch
+                out.append(
+                    bytes(item.arena)
+                    + item.offsets.tobytes()
+                    + item.lengths.tobytes()
+                )
+    return out
+
+
+@pytest.mark.parametrize("producers", [1, 3])
+@pytest.mark.parametrize("kind", ["dense", "ragged"])
+@settings(max_examples=4, deadline=None)
+@given(
+    batch=st.integers(16, 96),
+    lookahead=st.integers(1, 8),
+    budget_pct=st.integers(0, 60),
+    seed=st.integers(0, 50),
+)
+def test_batch_bytes_identical_across_eviction_policies(
+    fixed_store, variable_store, kind, producers, batch, lookahead,
+    budget_pct, seed,
+):
+    """The acceptance contract: {off, lru, belady} produce byte-identical
+    batches for 3 epochs, dense and ragged, single- and multi-producer,
+    at any budget/lookahead geometry."""
+    store, _ = fixed_store if kind == "dense" else variable_store
+    sh = LIRSShuffler(store.num_records, batch, seed=seed)
+    base = _epoch_bytes(
+        InputPipeline(
+            lambda e: sh.epoch_batches(e),
+            store_fetch_fn(store),
+            prefetch=2,
+            num_producers=producers,
+        ),
+        epochs=3,
+    )
+    budget = int(store.file_size * budget_pct / 100)
+    for policy in ("lru", "belady"):
+        with PrefetchingFetcher(
+            store,
+            sh,
+            budget_bytes=budget,
+            lookahead=lookahead,
+            workers=2,
+            policy=policy,
+        ) as f:
+            got = _epoch_bytes(
+                InputPipeline(
+                    f.batch_iter, f, prefetch=2, num_producers=producers
+                ),
+                epochs=3,
+            )
+            assert f.last_error is None
+            assert f.cache.stray_unpins == 0
+        assert got == base, f"policy {policy} changed served bytes"
+
+
+# --------------------------------------------------- TieredCache unit level
+def test_belady_cache_evicts_farthest_next_use():
+    lengths = np.full(40, 8, np.int64)
+    cache = TieredCache(lengths, budget_bytes=8 * 10, policy="belady")
+    src = np.arange(40 * 8, dtype=np.uint8) % 251
+    off = np.arange(40, dtype=np.int64) * 8
+    ids = np.arange(10, dtype=np.int64)
+    cache.insert(ids, src, off[:10])
+    # next uses: record i used at position 100 - 10*i  (record 0 farthest)
+    cache.note_next_use(ids, 100 - 10 * ids)
+    newcomers = np.arange(10, 14, dtype=np.int64)
+    cache.note_next_use(newcomers, 1)  # about to be used
+    cache.insert(newcomers, src, off[10:14])
+    # victims must be the 4 farthest next uses: records 0..3
+    assert not cache.resident(np.arange(4)).any()
+    assert cache.resident(np.arange(4, 14)).all()
+
+
+def test_belady_cache_evicts_unknown_next_use_first():
+    lengths = np.full(8, 4, np.int64)
+    cache = TieredCache(lengths, budget_bytes=4 * 4, policy="belady")
+    src = np.zeros(8 * 4, np.uint8)
+    off = np.arange(8, dtype=np.int64) * 4
+    cache.insert(np.arange(4, dtype=np.int64), src, off[:4])
+    cache.note_next_use(np.array([0, 1, 2]), [5, 6, 7])  # 3 known, #3 NEVER
+    assert cache.next_use[3] == NEVER
+    cache.insert(np.array([4]), src, off[4:5])
+    assert not cache.resident(np.array([3]))[0]
+    assert cache.resident(np.array([0, 1, 2, 4])).all()
+
+
+def test_cache_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="policy"):
+        TieredCache(np.full(4, 8, np.int64), 64, policy="mru")
+
+
+def test_stray_unpin_is_counted_and_clamped():
+    lengths = np.full(6, 8, np.int64)
+    cache = TieredCache(lengths, budget_bytes=8 * 6)
+    ids = np.arange(3, dtype=np.int64)
+    cache.pin(ids)
+    cache.unpin(ids)
+    assert cache.stray_unpins == 0
+    cache.unpin(ids[:2])  # no matching pin: a window-accounting bug
+    assert cache.stray_unpins == 2
+    assert (cache._pin >= 0).all()  # still clamped (eviction math safe)
+    cache.unpin(np.array([5, 5]))  # duplicate ids in one call both count
+    assert cache.stray_unpins == 4
+
+
+def test_scheduler_feeds_exact_next_use_positions(fixed_store):
+    """After a batch is served+retired, each record's Belady priority is
+    its position in the *next* epoch's permutation (absolute stream
+    coordinates)."""
+    from repro.prefetch import LookaheadScheduler
+
+    store, _ = fixed_store
+    n = store.num_records
+    cache = TieredCache(store.lengths(), budget_bytes=64 * n, policy="belady")
+    sh = LIRSShuffler(n, 50, seed=21)
+    sched = LookaheadScheduler(sh, cache, lookahead=3)
+    plans = sched.fill()
+    first = plans[0].batch
+    sched.advance(first)  # serve + retire batch (0, 0)
+    stream1 = sh.epoch_index_stream(1)
+    pos1 = np.empty(n, np.int64)
+    pos1[stream1] = np.arange(n)
+    np.testing.assert_array_equal(
+        cache.next_use[first], n + pos1[first]
+    )
+    # records never retired keep the NEVER sentinel
+    untouched = np.setdiff1d(np.arange(n), first)
+    assert (cache.next_use[untouched] == NEVER).all()
+
+
+def test_reset_drops_stale_next_use_coordinates(fixed_store):
+    """An epoch replay restarts the stream's coordinate system: keeping
+    the abandoned run's absolute positions would make records with
+    imminent uses look like the farthest victims.  reset() must re-price
+    everything to NEVER."""
+    from repro.prefetch import LookaheadScheduler
+
+    store, _ = fixed_store
+    n = store.num_records
+    cache = TieredCache(store.lengths(), budget_bytes=64 * n, policy="belady")
+    sh = LIRSShuffler(n, 50, seed=22)
+    sched = LookaheadScheduler(sh, cache, lookahead=3)
+    plans = sched.fill()
+    sched.advance(plans[0].batch)
+    assert (cache.next_use < NEVER).any()  # retirement priced something
+    sched.reset(0)
+    assert (cache.next_use == NEVER).all()
+
+
+def test_scheduler_next_use_never_past_max_epochs(fixed_store):
+    from repro.prefetch import LookaheadScheduler
+
+    store, _ = fixed_store
+    n = store.num_records
+    cache = TieredCache(store.lengths(), budget_bytes=64 * n, policy="belady")
+    sh = LIRSShuffler(n, n, seed=4)  # one batch per epoch
+    sched = LookaheadScheduler(sh, cache, lookahead=1, max_epochs=1)
+    plans = sched.fill()
+    sched.advance(plans[0].batch)
+    # the stream ends after epoch 0: there is no next use
+    assert (cache.next_use == NEVER).all()
+
+
+# --------------------------------------------------- ring handoff regressions
+def test_fully_resident_dense_batch_is_zero_scratch_copies(fixed_store):
+    store, recs = fixed_store
+    n = store.num_records
+    sh = LIRSShuffler(n, 32, seed=31)
+    ring = BatchBufferRing(32, 64, depth=4)
+    with PrefetchingFetcher(
+        store, sh, budget_bytes=64 * n, lookahead=4, ring=ring,
+        background=False, policy="belady",
+    ) as f:
+        # warm: everything resident
+        rb = store.read_batch_ragged(np.arange(n))
+        f.cache.insert(np.arange(n), rb.arena, rb.offsets)
+        store.stats.reset()
+        idx = next(sh.epoch_batches(0))
+        out = f(idx)
+        assert [bytes(r) for r in out] == [recs[i] for i in idx]
+        assert f.cache.scratch_copies == 0
+        assert f.cache.scratch_copy_bytes == 0
+        assert store.stats.batch_records == 0  # pure DRAM gather
+        ring.recycle(out)
+
+
+def test_fully_missed_batches_read_straight_into_ring(fixed_store, variable_store):
+    """The miss side of the handoff: a cold batch lands in the ring slot
+    via the store's extent engine directly — no tmp batch + row copy."""
+    store, recs = fixed_store
+    sh = LIRSShuffler(store.num_records, 16, seed=32)
+    ring = BatchBufferRing(16, 64, depth=2)
+    with PrefetchingFetcher(
+        store, sh, budget_bytes=0, lookahead=2, ring=ring, background=False
+    ) as f:
+        idx = next(sh.epoch_batches(0))
+        out = f(idx)
+        assert [bytes(r) for r in out] == [recs[i] for i in idx]
+        assert f.cache.scratch_copies == 0
+        ring.recycle(out)
+    vstore, vrecs = variable_store
+    lens = vstore.lengths()
+    vring = RaggedBufferRing(int(lens.max()) * 16, 16, depth=2)
+    vsh = LIRSShuffler(vstore.num_records, 16, seed=33)
+    with PrefetchingFetcher(
+        vstore, vsh, budget_bytes=0, lookahead=2, ring=vring, background=False
+    ) as f:
+        idx = next(vsh.epoch_batches(0))
+        rb = f(idx)
+        assert [bytes(r) for r in [rb.record(i) for i in range(len(rb))]] == [
+            vrecs[i] for i in idx
+        ]
+        assert f.cache.scratch_copies == 0
+        assert rb.arena.base is not None  # really the ring's slot
+        vring.recycle(rb)
+
+
+def test_partial_hit_batch_accounts_its_scratch_copy(fixed_store):
+    store, recs = fixed_store
+    sh = LIRSShuffler(store.num_records, 20, seed=34)
+    with PrefetchingFetcher(
+        store, sh, budget_bytes=64 * 100, lookahead=2, background=False
+    ) as f:
+        rb = store.read_batch_ragged(np.arange(10))
+        f.cache.insert(np.arange(10), rb.arena, rb.offsets)
+        idx = np.arange(20)  # half resident, half not
+        out = f(idx)
+        assert [bytes(r) for r in out] == [recs[i] for i in idx]
+        assert f.cache.scratch_copies == 1
+        assert f.cache.scratch_copy_bytes == 10 * 64  # only the miss rows
+
+
+def test_recycled_ring_slots_never_aliased_by_inflight_gather(fixed_store):
+    """A served batch's buffer must not be handed to another in-flight
+    fetch before the consumer recycles it — across producers, policies
+    and the prefetch worker."""
+    store, _ = fixed_store
+    n = store.num_records
+    sh = LIRSShuffler(n, 25, seed=35)
+
+    class TrackingRing(BatchBufferRing):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.live_bases = set()
+
+        def acquire(self, batch_size=None):
+            buf = super().acquire(batch_size)
+            base = buf
+            while base.base is not None:
+                base = base.base
+            assert id(base) not in self.live_bases, (
+                "ring handed out a slot still owned by an unrecycled batch"
+            )
+            self.live_bases.add(id(base))
+            return buf
+
+        def recycle(self, arr):
+            base = arr
+            while getattr(base, "base", None) is not None:
+                base = base.base
+            self.live_bases.discard(id(base))
+            super().recycle(arr)
+
+    ring = TrackingRing(25, 64, depth=3)
+    with PrefetchingFetcher(
+        store, sh, budget_bytes=int(store.file_size * 0.4), lookahead=4,
+        workers=2, ring=ring, policy="belady",
+    ) as f:
+        pipe = InputPipeline(
+            f.batch_iter, f, prefetch=2, num_producers=3,
+            recycle_fn=ring.recycle,
+        )
+        served = []
+        for e in range(2):
+            for item in pipe.epoch(e):
+                served.append(bytes(item.reshape(-1)))  # consume before recycle
+        assert f.last_error is None
+    # correctness of every batch while slots were recycled under pressure
+    flat = b"".join(served)
+    assert len(flat) == 2 * (n // 25) * 25 * 64
+
+
+# --------------------------------------------------- model plumbing
+def test_io_plan_carries_policy_and_orders_policies():
+    sh = LIRSShuffler(10_000, 256, seed=0, avg_instance_bytes=128)
+    total = 10_000 * 128.0
+    for frac in (0.1, 0.4, 0.7):
+        lru = sh.io_plan(
+            total, is_sparse=False, cache_budget_bytes=frac * total,
+            eviction_policy="lru",
+        )
+        bel = sh.io_plan(
+            total, is_sparse=False, cache_budget_bytes=frac * total,
+            eviction_policy="belady",
+        )
+        assert lru.eviction_policy == "lru"
+        assert bel.eviction_policy == "belady"
+        assert bel.cache_hit_fraction == pytest.approx(frac)
+        assert bel.cache_hit_fraction > lru.cache_hit_fraction
+    with pytest.raises(ValueError, match="policy"):
+        sh.io_plan(
+            total, is_sparse=False, cache_budget_bytes=total,
+            eviction_policy="fifo",
+        )
+
+
+def test_store_fetch_fn_plumbs_eviction_policy(fixed_store):
+    store, _ = fixed_store
+    sh = LIRSShuffler(store.num_records, 16, seed=9)
+    f = store_fetch_fn(
+        store, shuffler=sh, cache_budget_bytes=64 * 50, eviction_policy="belady"
+    )
+    assert f.cache.policy == "belady"
+    f.close()
+
+
+def test_read_batch_ragged_out_validates(fixed_store):
+    store, recs = fixed_store
+    idx = np.array([3, 1, 4, 1, 5])
+    lens = store.lengths()[idx]
+    arena = np.empty(int(lens.sum()), np.uint8)
+    off = np.empty(5, np.int32)
+    ln = np.empty(5, np.int32)
+    rb = store.read_batch_ragged(idx, out=(arena, off, ln))
+    assert rb.arena is arena
+    assert [bytes(rb.record(i)) for i in range(5)] == [recs[i] for i in idx]
+    with pytest.raises(ValueError, match="sized"):
+        store.read_batch_ragged(idx, out=(arena[:-1], off, ln))
+    with pytest.raises(ValueError, match="uint8"):
+        store.read_batch_ragged(
+            idx, out=(np.empty(int(lens.sum()), np.int32), off, ln)
+        )
+    with pytest.raises(ValueError, match="ring"):
+        store.read_batch_ragged(
+            idx,
+            ring=RaggedBufferRing(1024, 8),
+            out=(arena, off, ln),
+        )

@@ -66,8 +66,19 @@ def test_smoke_prefill_decode(arch):
 
 @pytest.mark.parametrize("arch", ["minitron-8b", "recurrentgemma-2b", "xlstm-1.3b"])
 def test_decode_matches_prefill_logits(arch):
-    """Teacher-forced decode over a prompt reproduces prefill's last logits."""
+    """Teacher-forced decode over a prompt reproduces prefill's last logits.
+
+    xlstm runs in float32: its prefill (chunkwise-parallel mLSTM) and
+    decode (O(1) recurrent step) are *different algorithms* for the same
+    recurrence, so bf16 accumulation order legitimately diverges (~0.06
+    abs on logits — crosses the 2e-2 gate) while f32 agrees to ~2e-6,
+    which is what this test is after: decode-cache correctness, not bf16
+    stability.  The attention archs keep bf16 — their decode replays the
+    same kernel shapes prefill used.
+    """
     cfg = get_config(arch, smoke=True)
+    if arch == "xlstm-1.3b":
+        cfg = cfg.replace(dtype="float32")
     params = M.init_params(cfg, RNG)
     tokens = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab_size)
     _, logits_pre = M.prefill(cfg, params, tokens)
