@@ -1,0 +1,227 @@
+"""compare — benchmark regression gate against committed baselines.
+
+``benchmarks/baselines/*.json`` are blessed copies of past benchmark
+result files.  This tool re-extracts a curated metric set from a fresh
+run (``benchmarks/results/*.json``), diffs it against the baseline with
+*per-metric-kind tolerances*, writes the full diff to
+``benchmarks/results/compare_diff.json`` (the nightly workflow uploads
+it as an artifact), and exits non-zero when any metric regressed beyond
+its tolerance — so a hit-rate drop, a coalescing-factor loss, a wasted-
+bytes jump, or a counter that must stay zero (``rejected``,
+``stray_unpins``) fails the run, not just a human eyeballing curves.
+
+Metric kinds and their tolerances (direction-aware: only *worse* trips):
+
+=============  ==============================  =======================
+kind           examples                        tolerance
+=============  ==============================  =======================
+throughput     records/s, speedup ratios       50 % relative (shared
+                                               CI boxes are noisy; the
+                                               gate catches collapses,
+                                               not jitter)
+hit_rate       measured DRAM-tier hit rate     0.02 absolute
+factor         records per coalesced I/O       15 % relative
+bytes          storage / wasted bytes          10 % relative + 4 KiB
+zero           rejected, stray unpins          must be exactly 0
+=============  ==============================  =======================
+
+Usage::
+
+    python -m benchmarks.compare                 # gate current results
+    python -m benchmarks.compare --only prefetch # subset
+    python -m benchmarks.compare --bless         # re-bless baselines
+                                                 # from current results
+
+Re-blessing is a deliberate act: run the benchmark fresh, eyeball the
+diff this tool prints, then ``--bless`` and commit the updated
+``benchmarks/baselines/*.json`` alongside the change that moved the
+numbers (see benchmarks/README.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+from typing import Callable, Dict, Tuple
+
+ROOT = Path(__file__).resolve().parent
+BASELINE_DIR = ROOT / "baselines"
+RESULTS_DIR = ROOT / "results"
+DIFF_PATH = RESULTS_DIR / "compare_diff.json"
+
+# metric kind -> (higher_is_better, rel_tol, abs_tol); "zero" is special
+KINDS: Dict[str, Tuple[bool, float, float]] = {
+    "throughput": (True, 0.50, 0.0),
+    "hit_rate": (True, 0.0, 0.02),
+    "factor": (True, 0.15, 0.0),
+    "bytes": (False, 0.10, 4096.0),
+    "zero": (False, 0.0, 0.0),
+}
+
+Metrics = Dict[str, Tuple[str, float]]  # name -> (kind, value)
+
+
+def _prefetch_metrics(res: dict) -> Metrics:
+    m: Metrics = {
+        "cold_records_per_s": ("throughput", res["cold_records_per_s"]),
+        "headline/warm_speedup": (
+            "throughput",
+            res["headline"]["warm_speedup_vs_cold"],
+        ),
+        "headline/rejected_planner_on": (
+            "zero",
+            res["headline"].get("rejected_planner_on_total", 0),
+        ),
+        "headline/stray_unpins": (
+            "zero",
+            res["headline"]["stray_unpins_total"],
+        ),
+    }
+    for frac, e in res["budgets"].items():
+        for pol in ("lru", "belady"):
+            p = e[pol]
+            k = f"{pol}@{frac}"
+            m[f"hit_rate/{k}"] = ("hit_rate", p["measured_hit_rate"])
+            m[f"storage_record_bytes/{k}"] = (
+                "bytes",
+                p["storage_record_bytes_per_epoch"],
+            )
+            if pol == "belady":
+                # only belady's floor is exact (baseline ~0 B); LRU's
+                # wasted bytes ride thread-timing jitter far wider than
+                # the bytes tolerance, and the sweep's own 0.05 hit-rate
+                # slack is the right gate for that policy
+                m[f"wasted_read_bytes/{k}"] = (
+                    "bytes",
+                    p["wasted_read_bytes_per_epoch"],
+                )
+            m[f"rejected/{k}"] = ("zero", p["rejected"])
+    return m
+
+
+def _ragged_read_metrics(res: dict) -> Metrics:
+    m: Metrics = {}
+    for b, e in res["batches"].items():
+        m[f"records_per_io/b{b}"] = ("factor", e["records_per_io"])
+        m[f"read_speedup/b{b}"] = ("throughput", e["read_speedup_vs_slicing"])
+        m[f"csr_speedup/b{b}"] = ("throughput", e["csr_speedup_vs_slicing"])
+    return m
+
+
+def _batch_read_metrics(res: dict) -> Metrics:
+    m: Metrics = {}
+    for b, e in res["batches"].items():
+        m[f"records_per_io/b{b}"] = ("factor", e["records_per_io"])
+        m[f"coalesced_rec_per_s/b{b}"] = ("throughput", e["coalesced"])
+    return m
+
+
+EXTRACTORS: Dict[str, Callable[[dict], Metrics]] = {
+    "prefetch": _prefetch_metrics,
+    "ragged_read": _ragged_read_metrics,
+    "batch_read": _batch_read_metrics,
+}
+
+
+def _judge(kind: str, base: float, cur: float) -> Tuple[bool, str]:
+    """Returns (regressed, description).  Only *worse-than-baseline*
+    beyond tolerance regresses; improvements always pass (bless them
+    into the baseline when intentional)."""
+    if kind == "zero":
+        return cur != 0, f"must be 0, got {cur:g}"
+    higher, rel, abs_tol = KINDS[kind]
+    delta = cur - base if higher else base - cur
+    if delta >= 0:
+        return False, "improved-or-equal"
+    slack = max(rel * abs(base), abs_tol)
+    return -delta > slack, f"worse by {-delta:g} (slack {slack:g})"
+
+
+def compare(only=None) -> Tuple[dict, bool]:
+    names = sorted(
+        n.stem
+        for n in BASELINE_DIR.glob("*.json")
+        if only is None or n.stem in only
+    )
+    diff = {"benchmarks": {}, "regressions": []}
+    for name in names:
+        extract = EXTRACTORS.get(name)
+        if extract is None:
+            diff["regressions"].append(f"{name}: no extractor registered")
+            continue
+        cur_path = RESULTS_DIR / f"{name}.json"
+        if not cur_path.exists():
+            diff["regressions"].append(
+                f"{name}: no fresh result at {cur_path} (run the benchmark "
+                f"before comparing)"
+            )
+            continue
+        base = extract(json.loads((BASELINE_DIR / f"{name}.json").read_text()))
+        cur = extract(json.loads(cur_path.read_text()))
+        rows = {}
+        for metric, (kind, bval) in sorted(base.items()):
+            if metric not in cur:
+                diff["regressions"].append(
+                    f"{name}/{metric}: present in baseline, missing from "
+                    f"fresh run"
+                )
+                continue
+            cval = cur[metric][1]
+            regressed, why = _judge(kind, float(bval), float(cval))
+            rows[metric] = {
+                "kind": kind,
+                "baseline": float(bval),
+                "current": float(cval),
+                "regressed": regressed,
+                "why": why,
+            }
+            if regressed:
+                diff["regressions"].append(
+                    f"{name}/{metric} [{kind}]: {bval:g} -> {cval:g} ({why})"
+                )
+        diff["benchmarks"][name] = rows
+    return diff, not diff["regressions"]
+
+
+def bless(only=None) -> None:
+    BASELINE_DIR.mkdir(exist_ok=True)
+    for name in EXTRACTORS:
+        if only is not None and name not in only:
+            continue
+        src = RESULTS_DIR / f"{name}.json"
+        if src.exists():
+            shutil.copy(src, BASELINE_DIR / f"{name}.json")
+            print(f"blessed {name}: {src} -> {BASELINE_DIR / f'{name}.json'}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names (default: every "
+                         "committed baseline)")
+    ap.add_argument("--bless", action="store_true",
+                    help="copy current results over the baselines instead "
+                         "of comparing")
+    args = ap.parse_args(argv)
+    only = set(filter(None, args.only.split(","))) or None
+    if args.bless:
+        bless(only)
+        return 0
+    diff, ok = compare(only)
+    DIFF_PATH.parent.mkdir(exist_ok=True)
+    DIFF_PATH.write_text(json.dumps(diff, indent=1))
+    for name, rows in diff["benchmarks"].items():
+        worst = sum(r["regressed"] for r in rows.values())
+        print(f"{name}: {len(rows)} metrics vs baseline, {worst} regressed")
+    if not ok:
+        print("\nREGRESSIONS:")
+        for r in diff["regressions"]:
+            print(f"  {r}")
+    print(f"\ndiff written to {DIFF_PATH}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

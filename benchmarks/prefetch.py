@@ -13,6 +13,19 @@ before the first read; this benchmark measures what the
   far below ``c`` at partial budgets; Belady — farthest next use, exact
   under clairvoyance — serves one hit per slot per epoch, the pigeonhole
   bound, and must sit at or above LRU at **every** budget point.
+* **planner axis** — every (budget, policy) point runs with the
+  policy-aware prefetch planner on *and* off.  Planner-off reproduces
+  the arrival-order-admission pathology at budgets narrower than a
+  batch: ``rejected`` blows up, cross-epoch retention collapses, and the
+  epoch reads ~every record from storage.  Planner-on must report
+  ``rejected == 0`` at every point (both policies) and — under
+  ``belady``, whose retention the planner restores — *strictly fewer
+  storage record bytes* than planner-off wherever planner-off rejected
+  inserts (LRU has almost no retention to restore at those budgets:
+  its closed form is ~c²/2, so no byte bar is set for it); the
+  wasted-bytes column reports each run's reads in excess of its
+  policy's closed-form miss floor, against the
+  ``wasted_read_fraction`` model (0 under belady-with-planner).
 * **cold vs warm epoch throughput** — consumer-side wall time of one
   epoch through the ``InputPipeline``: the cold coalesced path
   (``store_fetch_fn``, every batch read from storage on demand) vs the
@@ -50,7 +63,11 @@ from benchmarks.common import cached
 from repro.core.pipeline import InputPipeline, store_fetch_fn
 from repro.core.shuffler import LIRSShuffler
 from repro.prefetch.fetcher import PrefetchingFetcher
-from repro.storage.devices import STORAGE_MODELS
+from repro.storage.devices import (
+    STORAGE_MODELS,
+    cache_hit_model,
+    wasted_read_fraction,
+)
 from repro.storage.record_store import PAGE, RecordStore, RecordWriter
 
 N_RECORDS = 32_768
@@ -59,8 +76,12 @@ BATCH = 1024
 WORKERS = 4
 LOOKAHEAD = 8
 GAP = 4 * PAGE
-BUDGET_FRACS = [0.1, 0.25, 0.5, 1.0]
+# 0.01/0.02 sit below the batch fraction (1024/32768): the regime where
+# planner-off admission-by-arrival blows up ``rejected`` and forfeits
+# retention — exactly what the planner axis is here to show
+BUDGET_FRACS = [0.01, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0]
 POLICIES = ["lru", "belady"]
+PLANNERS = [True, False]
 WARM_EPOCHS = 3   # measured epochs after the warm-up epoch
 ACCEPT_MIN_BUDGET = 0.25
 
@@ -110,73 +131,111 @@ def run(force: bool = False):
             "budgets": {},
         }
 
+        def run_point(frac, budget, policy, planner):
+            fetcher = PrefetchingFetcher(
+                store,
+                sh,
+                budget_bytes=budget,
+                lookahead=LOOKAHEAD,
+                gap_bytes=GAP,
+                workers=WORKERS,
+                policy=policy,
+                planner=planner,
+            )
+            pipe = InputPipeline(fetcher.batch_iter, fetcher, prefetch=2)
+            _epoch_seconds(pipe, 0)  # warm-up epoch: populate the tier
+            fetcher.drain()
+            sched = fetcher.scheduler
+            p0, a0 = sched.planned_records, sched.admitted_records
+            store.stats.reset()
+            scr0 = fetcher.cache.scratch_copies
+            warm_s = min(
+                _epoch_seconds(pipe, e) for e in range(1, 1 + WARM_EPOCHS)
+            )
+            fetcher.drain()  # in-flight plans must charge these epochs
+            # avoided-storage-reads rate over the measured epochs (window
+            # dedups count as hits; their one read charges the first use;
+            # planner-doomed records are charged — the demand path reads
+            # them)
+            measured_hit = 1.0 - (sched.planned_records - p0) / max(
+                1, sched.admitted_records - a0
+            )
+            window_records = sched.window_records
+            storage_records = store.stats.batch_records  # pre-probe
+            plan = sh.io_plan(
+                total_bytes,
+                is_sparse=False,
+                coalesce_gap=GAP,
+                queue_depth=WORKERS,
+                cache_budget_bytes=budget,
+                prefetch_window_bytes=window_records * RECORD_BYTES,
+                eviction_policy=policy,
+            )
+            # the run's reads in excess of its policy's closed-form miss
+            # floor — what arrival-order admission wastes — vs the
+            # wasted_read_fraction model (0 under a planner-filtered tier)
+            lam = min(window_records / N_RECORDS, frac)
+            floor_hit = cache_hit_model(frac, policy, window_frac=lam)
+            wasted_frac = (
+                storage_records / WARM_EPOCHS / N_RECORDS - (1.0 - floor_hit)
+            )
+            wasted_model = wasted_read_fraction(
+                frac,
+                policy,
+                batch_frac=BATCH / N_RECORDS,
+                planner=planner,
+                window_frac=lam,
+            )
+            # determinism spot-check against the cold path (after the
+            # timing and the stats snapshot: the out-of-stream probe
+            # batch issues its own demand reads)
+            warm_first = bytes(fetcher(first_idx).reshape(-1))
+            fetcher.close()
+            return {
+                "planner": planner,
+                "warm_epoch_s": warm_s,
+                "warm_records_per_s": N_RECORDS / warm_s,
+                "warm_speedup_vs_cold": cold_s / warm_s,
+                "window_records": window_records,
+                "measured_hit_rate": measured_hit,
+                "model_hit_rate": plan.cache_hit_fraction,
+                "hit_rate_abs_err": abs(
+                    measured_hit - plan.cache_hit_fraction
+                ),
+                "storage_records_per_epoch": storage_records / WARM_EPOCHS,
+                "storage_record_bytes_per_epoch": (
+                    storage_records / WARM_EPOCHS * RECORD_BYTES
+                ),
+                "wasted_read_frac_measured": wasted_frac,
+                "wasted_read_frac_model": wasted_model,
+                "wasted_read_bytes_per_epoch": max(0.0, wasted_frac)
+                * total_bytes,
+                "demand_cache_hits": fetcher.cache.hits,
+                "prefetched_records": fetcher.prefetch_records,
+                "rejected": fetcher.cache.rejected,
+                "planned_skips": fetcher.cache.planned_skips,
+                "doomed_records": sched.doomed_records,
+                "stray_unpins": fetcher.cache.stray_unpins,
+                "warm_scratch_copies": fetcher.cache.scratch_copies - scr0,
+                "batches_identical_to_cold": warm_first == cold_first,
+                "modeled_epoch_read_s": {
+                    name: dev.t_epoch_read(plan)
+                    for name, dev in STORAGE_MODELS.items()
+                },
+            }
+
         for frac in BUDGET_FRACS:
             budget = int(frac * total_bytes)
             point = {"budget_bytes": budget}
             for policy in POLICIES:
-                fetcher = PrefetchingFetcher(
-                    store,
-                    sh,
-                    budget_bytes=budget,
-                    lookahead=LOOKAHEAD,
-                    gap_bytes=GAP,
-                    workers=WORKERS,
-                    policy=policy,
+                on = run_point(frac, budget, policy, planner=True)
+                off = run_point(frac, budget, policy, planner=False)
+                on["planner_off"] = off
+                on["planner_saved_record_bytes_per_epoch"] = (
+                    off["storage_record_bytes_per_epoch"]
+                    - on["storage_record_bytes_per_epoch"]
                 )
-                pipe = InputPipeline(fetcher.batch_iter, fetcher, prefetch=2)
-                _epoch_seconds(pipe, 0)  # warm-up epoch: populate the tier
-                fetcher.drain()
-                sched = fetcher.scheduler
-                p0, a0 = sched.planned_records, sched.admitted_records
-                store.stats.reset()
-                scr0 = fetcher.cache.scratch_copies
-                warm_s = min(
-                    _epoch_seconds(pipe, e) for e in range(1, 1 + WARM_EPOCHS)
-                )
-                # avoided-storage-reads rate over the measured epochs
-                # (window dedups count as hits; their one read charges the
-                # first use)
-                measured_hit = 1.0 - (sched.planned_records - p0) / max(
-                    1, sched.admitted_records - a0
-                )
-                window_records = sched.window_records
-                storage_records = store.stats.batch_records  # pre-probe
-                plan = sh.io_plan(
-                    total_bytes,
-                    is_sparse=False,
-                    coalesce_gap=GAP,
-                    queue_depth=WORKERS,
-                    cache_budget_bytes=budget,
-                    prefetch_window_bytes=window_records * RECORD_BYTES,
-                    eviction_policy=policy,
-                )
-                # determinism spot-check against the cold path (after the
-                # timing and the stats snapshot: the out-of-stream probe
-                # batch issues its own demand reads)
-                warm_first = bytes(fetcher(first_idx).reshape(-1))
-                fetcher.close()
-                point[policy] = {
-                    "warm_epoch_s": warm_s,
-                    "warm_records_per_s": N_RECORDS / warm_s,
-                    "warm_speedup_vs_cold": cold_s / warm_s,
-                    "window_records": window_records,
-                    "measured_hit_rate": measured_hit,
-                    "model_hit_rate": plan.cache_hit_fraction,
-                    "hit_rate_abs_err": abs(
-                        measured_hit - plan.cache_hit_fraction
-                    ),
-                    "storage_records_per_epoch": storage_records / WARM_EPOCHS,
-                    "demand_cache_hits": fetcher.cache.hits,
-                    "prefetched_records": fetcher.prefetch_records,
-                    "rejected": fetcher.cache.rejected,
-                    "stray_unpins": fetcher.cache.stray_unpins,
-                    "warm_scratch_copies": fetcher.cache.scratch_copies - scr0,
-                    "batches_identical_to_cold": warm_first == cold_first,
-                    "modeled_epoch_read_s": {
-                        name: dev.t_epoch_read(plan)
-                        for name, dev in STORAGE_MODELS.items()
-                    },
-                }
+                point[policy] = on
             point["belady_minus_lru_hit"] = (
                 point["belady"]["measured_hit_rate"]
                 - point["lru"]["measured_hit_rate"]
@@ -211,7 +270,31 @@ def run(force: bool = False):
                 for pol in POLICIES
             ),
             "deterministic": all(
-                e[pol]["batches_identical_to_cold"]
+                e[pol][k]
+                for e in out["budgets"].values()
+                for pol in POLICIES
+                for k in ("batches_identical_to_cold",)
+            )
+            and all(
+                e[pol]["planner_off"]["batches_identical_to_cold"]
+                for e in out["budgets"].values()
+                for pol in POLICIES
+            ),
+            "rejected_planner_on_total": sum(
+                e[pol]["rejected"]
+                for e in out["budgets"].values()
+                for pol in POLICIES
+            ),
+            # at every budget where planner-off rejected inserts, the
+            # planner must read strictly fewer storage record bytes
+            "planner_strict_reduction_ok": all(
+                e["belady"]["storage_record_bytes_per_epoch"]
+                < e["belady"]["planner_off"]["storage_record_bytes_per_epoch"]
+                for e in out["budgets"].values()
+                if e["belady"]["planner_off"]["rejected"] > 0
+            ),
+            "max_wasted_frac_planner_on": max(
+                e[pol]["wasted_read_frac_measured"]
                 for e in out["budgets"].values()
                 for pol in POLICIES
             ),
@@ -242,6 +325,8 @@ def rows():
                     f"x{p['warm_speedup_vs_cold']:.1f} vs cold "
                     f"hit={p['measured_hit_rate']:.3f} "
                     f"(model {p['model_hit_rate']:.3f}) "
+                    f"rejected={p['rejected']} "
+                    f"saved_B={p['planner_saved_record_bytes_per_epoch']:.0f} "
                     f"identical={p['batches_identical_to_cold']}",
                 )
             )
@@ -262,21 +347,30 @@ def rows():
 
 
 def policy_sweep(force: bool = True) -> bool:
-    """Print the LRU-vs-Belady hit-rate curves vs budget; returns whether
-    the sweep meets the acceptance bar (Belady ≥ LRU at every point,
-    measured ≈ model, byte-identity, zero stray unpins)."""
+    """Print the LRU-vs-Belady hit-rate curves vs budget (planner on, the
+    default), plus the planner-off comparison: per-point wasted bytes and
+    rejected inserts.  Returns whether the sweep meets the acceptance bar
+    — Belady ≥ LRU at every point, measured ≈ model, byte-identity for
+    {planner on, off} × {lru, belady}, zero stray unpins, ``rejected ==
+    0`` at every planner-on point, and (belady) strictly fewer storage
+    record bytes than planner-off wherever planner-off rejected."""
     res = run(force=force)
     print(f"{'budget':>8} {'lru meas':>9} {'lru model':>10} "
-          f"{'bel meas':>9} {'bel model':>10} {'Δ(bel-lru)':>11}")
+          f"{'bel meas':>9} {'bel model':>10} {'Δ(bel-lru)':>11} "
+          f"{'off rej':>8} {'wasted_off':>11} {'saved_KiB':>10}")
     ok = True
     for frac, e in sorted(res["budgets"].items(), key=lambda kv: float(kv[0])):
         lru, bel = e["lru"], e["belady"]
+        off = bel["planner_off"]
         print(
             f"{frac:>8} {lru['measured_hit_rate']:>9.4f} "
             f"{lru['model_hit_rate']:>10.4f} "
             f"{bel['measured_hit_rate']:>9.4f} "
             f"{bel['model_hit_rate']:>10.4f} "
-            f"{e['belady_minus_lru_hit']:>+11.4f}"
+            f"{e['belady_minus_lru_hit']:>+11.4f} "
+            f"{off['rejected']:>8d} "
+            f"{off['wasted_read_frac_measured']:>11.4f} "
+            f"{bel['planner_saved_record_bytes_per_epoch'] / 1024:>10.0f}"
         )
         ok &= e["belady_minus_lru_hit"] >= -1e-9
         for pol in POLICIES:
@@ -285,12 +379,32 @@ def policy_sweep(force: bool = True) -> bool:
                 0.05, 0.12 * p["model_hit_rate"]
             )
             ok &= p["batches_identical_to_cold"]
+            ok &= p["planner_off"]["batches_identical_to_cold"]
             ok &= p["stray_unpins"] == 0
+            ok &= p["planner_off"]["stray_unpins"] == 0
+            # the planner's contract: no insert ever rejected, and waste
+            # (reads beyond the closed-form miss floor) within tolerance
+            # of the wasted_read_fraction model — 0 under belady
+            ok &= p["rejected"] == 0
+            ok &= (
+                abs(
+                    p["wasted_read_frac_measured"]
+                    - p["wasted_read_frac_model"]
+                )
+                <= 0.05
+            )
+        if off["rejected"] > 0:
+            ok &= (
+                bel["storage_record_bytes_per_epoch"]
+                < off["storage_record_bytes_per_epoch"]
+            )
     h = res["headline"]
     print(
         f"headline: x{h['warm_speedup_vs_cold']:.2f} warm vs cold, "
         f"belady>=lru={h['belady_never_below_lru']}, "
         f"max_model_err={h['max_hit_rate_abs_err']:.4f}, "
+        f"rejected_planner_on={h['rejected_planner_on_total']}, "
+        f"planner_strict_reduction={h['planner_strict_reduction_ok']}, "
         f"deterministic={h['deterministic']}, sweep_ok={ok}"
     )
     return ok

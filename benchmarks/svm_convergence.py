@@ -85,7 +85,8 @@ def run(force: bool = False):
                 svm_l, tl = _run(xtr, ytr, "lirs", E_MAX, seed)
                 _, tref = _run(xtr, ytr, "lirs", 3 * E_MAX, seed + 10)
                 f_star = min(tb[-1], tl[-1], tref[-1]) * 0.99999
-                rel = lambda t: (t - f_star) / abs(f_star)
+                def rel(t):
+                    return (t - f_star) / abs(f_star)
                 target = rel(tb)[-1]  # BMF's best level after E_MAX epochs
                 el = next((i + 1 for i, f in enumerate(rel(tl)) if f <= target), E_MAX + 1)
                 epochs_l.append(el)

@@ -260,6 +260,7 @@ def store_fetch_fn(
     prefetch_background: bool = True,
     max_epochs: Optional[int] = None,
     eviction_policy: str = "lru",
+    prefetch_planner: Optional[bool] = None,
 ) -> Callable[[np.ndarray], Any]:
     """Build an :class:`InputPipeline` ``fetch_fn`` over a record store.
 
@@ -278,11 +279,15 @@ def store_fetch_fn(
     records from a byte-budgeted DRAM cache and prefetching future
     batches along the shuffler's known index stream, evicting by
     ``eviction_policy`` (``lru``, or ``belady`` — farthest-next-use,
-    exact under clairvoyance).  The returned object is still a plain
-    ``fetch_fn`` (batch bytes are identical with the tier on or off, for
-    every policy); additionally pass its ``batch_iter`` as the
-    pipeline's ``batch_iter_fn`` so the lookahead window re-syncs at
-    epoch boundaries.
+    exact under clairvoyance).  ``prefetch_planner`` toggles the
+    policy-aware planner (None = auto: on for a Belady tier): plans are
+    occupancy-simulated so doomed records are never read twice, and
+    inserts are admission-filtered so the cache retains by reuse
+    distance instead of arrival order.  The returned object is still a
+    plain ``fetch_fn`` (batch bytes are identical with the tier on or
+    off, for every policy and planner setting); additionally pass its
+    ``batch_iter`` as the pipeline's ``batch_iter_fn`` so the lookahead
+    window re-syncs at epoch boundaries.
 
     Pair with ``InputPipeline(recycle_fn=ring.recycle)`` for the
     allocation-free steady state; both ring classes ignore foreign arrays,
@@ -305,6 +310,7 @@ def store_fetch_fn(
             background=prefetch_background,
             max_epochs=max_epochs,
             policy=eviction_policy,
+            planner=prefetch_planner,
         )
     if mode == "auto":
         mode = "ragged" if store.variable else "dense"

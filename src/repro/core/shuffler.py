@@ -25,7 +25,6 @@ import numpy as np
 
 from repro.core.assignment import FeistelAssignment, TableAssignment
 from repro.storage.devices import cache_hit_model
-from repro.storage.record_store import PAGE
 
 
 @dataclasses.dataclass

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import struct
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -7,7 +7,7 @@ AlexNet/OverFeat/VGG16 on ImageNet.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

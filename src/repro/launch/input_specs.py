@@ -5,7 +5,7 @@ launcher uses to pre-compile before touching real data.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

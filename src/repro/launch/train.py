@@ -13,10 +13,6 @@ from __future__ import annotations
 import argparse
 import json
 import tempfile
-from pathlib import Path
-
-import jax
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data.synthetic import decode_token_batch, make_token_dataset
@@ -55,6 +51,13 @@ def build_argparser():
                     help="DRAM tier eviction: lru (recency) or belady "
                          "(farthest next use — exact under the known "
                          "LIRS permutation, the default)")
+    ap.add_argument("--prefetch-planner", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="policy-aware prefetch planner: simulate the "
+                         "cache admission decision along the known index "
+                         "stream and drop doomed records from prefetch "
+                         "plans instead of reading them twice (auto = on "
+                         "for belady, off for lru)")
     return ap
 
 
@@ -99,6 +102,11 @@ def main(argv=None):
             workers=args.io_workers,
             max_epochs=args.epochs,
             eviction_policy=args.eviction_policy,
+            prefetch_planner=(
+                None
+                if args.prefetch_planner == "auto"
+                else args.prefetch_planner == "on"
+            ),
         )
         batch_iter_fn = fetcher.batch_iter
 
@@ -139,6 +147,7 @@ def main(argv=None):
         fetcher.close()
         summary["cache"] = {
             "policy": fetcher.cache.policy,
+            "planner": fetcher.planner,
             "budget_bytes": fetcher.cache.budget_bytes,
             "used_bytes": fetcher.cache.used_bytes,
             "demand_hits": fetcher.cache.hits,
@@ -146,6 +155,9 @@ def main(argv=None):
             "window_hits": fetcher.scheduler.window_hits,
             "prefetched_records": fetcher.prefetch_records,
             "rejected_inserts": fetcher.cache.rejected,
+            "planned_skips": fetcher.cache.planned_skips,
+            "doomed_records": fetcher.scheduler.doomed_records,
+            "probe_skips": fetcher.probe_skips,
             "stray_unpins": fetcher.cache.stray_unpins,
             "scratch_copies": fetcher.cache.scratch_copies,
         }

@@ -14,7 +14,6 @@ Both return (y, aux_metrics) where aux contains the load-balancing loss.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 """Positional encodings: RoPE, M-RoPE (Qwen2-VL), sinusoidal."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np

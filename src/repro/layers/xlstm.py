@@ -13,7 +13,6 @@ why xlstm runs the long_500k cell.  Decode is the O(1) recurrent step.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

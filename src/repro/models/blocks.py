@@ -11,7 +11,7 @@ Blocks return ``(x, cache, aux)`` where aux is a scalar f32 auxiliary loss
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,7 @@ from repro.layers import attention as attn
 from repro.layers import moe as moe_lib
 from repro.layers import rglru as rglru_lib
 from repro.layers import xlstm as xlstm_lib
-from repro.layers.common import dense_init, rms_norm
+from repro.layers.common import rms_norm
 from repro.layers.mlp import apply_ffn, init_ffn
 from repro.layers.positional import apply_rope
 from repro.models.config import ModelConfig

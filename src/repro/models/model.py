@@ -7,8 +7,7 @@ Hybrid patterns scan over whole pattern periods.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

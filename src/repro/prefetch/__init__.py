@@ -27,6 +27,15 @@ storage:
   pread pool, so storage reads run ahead of demand while the demand path
   serves resident records at DRAM speed.  Batch bytes are identical with
   prefetch on or off, for any producer count.
+
+The **policy-aware planner** (on by default for a Belady tier) closes
+the admission side of the loop: plans are filtered through a forward
+occupancy simulation so doomed records — ones the cache could not hold
+to their use — are never read twice, and every insert runs an
+admission exchange on exact next-use priorities, so retention survives
+cache budgets narrower than a single batch.  ``TieredCache.rejected``
+stays 0 with the planner on; its decisions are counted separately in
+``planned_skips`` (insert-time) and ``doomed_records`` (plan-time).
 """
 from repro.prefetch.cache import NEVER, TieredCache, copy_records
 from repro.prefetch.fetcher import PrefetchingFetcher

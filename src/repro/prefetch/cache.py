@@ -26,6 +26,19 @@ Pinning is orthogonal to the policy: records inside the lookahead window
 (i.e. about to be used) carry a pin count and are never evicted, no
 matter how stale their tick or how far their next use.
 
+Admission is the policy's other half (the prefetch *planner*'s hook):
+an unfiltered ``insert`` accepts incoming records in arrival order and
+only then lets eviction pick victims — under ``belady`` that admits a
+far-future record by evicting a sooner-use resident, which forfeits the
+retention the closed forms promise and, when every victim is pinned,
+shows up as ``rejected`` inserts.  ``admit()`` answers, without copying
+a byte, which of a candidate set an admission-filtered insert would
+retain (free slots first, then strictly-sooner-next-use exchanges
+against evictable residents); ``insert(..., filtered=True)`` applies
+the same rule under one lock and counts the records it declines in
+``planned_skips`` — a *decision*, distinct from the ``rejected``
+counter, which keeps meaning "insert wanted a slot and none existed".
+
 Thread safety: one lock around every public method.  Gathers copy out
 under the lock, so a concurrent insert/evict can never recycle a slot
 mid-copy.
@@ -118,6 +131,14 @@ class TieredCache:
         self.insertions = 0
         self.evictions = 0
         self.rejected = 0  # inserts dropped because every victim was pinned
+        # records an admission-filtered insert *chose* not to cache —
+        # skipped by decision, not by slot starvation; the demand path
+        # reads them exactly once and moves on.  Each filtered insert's
+        # decline counts once here; earlier trims of the same record
+        # (plan-time dooms, execute-time probe skips) are counted at
+        # their own sites (scheduler.doomed_records, fetcher.probe_skips)
+        self.planned_skips = 0
+        self.planned_skip_bytes = 0
         self.stray_unpins = 0  # unpins without a matching pin (a pairing bug)
         # copies the serve path routed through an intermediate buffer
         # instead of the final destination (ring slot / caller buffer) —
@@ -191,6 +212,76 @@ class TieredCache:
             self.scratch_copies += 1
             self.scratch_copy_bytes += int(nbytes)
 
+    # ---------------------------------------------------------- admission
+    def _admission_locked(
+        self, nu: Optional[np.ndarray], need: int
+    ) -> np.ndarray:
+        """Mask over ``need`` insert candidates (non-resident, slot-sized,
+        deduplicated): which ones an admission-filtered insert retains.
+
+        Free slots admit unconditionally — caching into an empty slot can
+        only add future hits.  Beyond them, admission is an *exchange*
+        against the evictable (unpinned) residents: under ``belady`` with
+        known ``nu`` (each candidate's next-use stream position), the
+        j-th soonest remaining candidate is admitted iff it strictly
+        beats the j-th farthest evictable resident — sorted ascending vs
+        sorted descending, the greedy pairing is the optimal exchange,
+        and the subsequent eviction takes exactly the paired losers.
+        Ties (NEVER vs NEVER included) decline: replacing a resident with
+        an equally-priced newcomer is pure churn.  Under ``lru`` (or with
+        no ``nu``) admission is a capacity check only: first
+        ``free + evictable`` candidates, same acceptance order as an
+        unfiltered insert, just *decided* instead of ``rejected``.
+        """
+        free = len(self._free)
+        occupied = self._id_of[self._id_of >= 0]
+        evictable = occupied[self._pin[occupied] == 0]
+        take = np.zeros(need, bool)
+        room = free + len(evictable)
+        if room == 0 or need == 0:
+            return take
+        if self.policy != "belady" or nu is None:
+            take[: min(need, room)] = True
+            return take
+        order = np.argsort(nu, kind="stable")  # soonest next use first
+        k = min(need, room)
+        cand = order[:k]
+        n_beyond = k - free
+        if n_beyond > 0:
+            worst = np.sort(self.next_use[evictable])[::-1][:n_beyond]
+            cand = np.concatenate(
+                (cand[:free], cand[free:][nu[cand[free:]] < worst])
+            )
+        take[cand] = True
+        return take
+
+    def admit(
+        self, ids: np.ndarray, next_use: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """Advisory admission probe (no bytes move): for each of ``ids``,
+        would an admission-filtered :meth:`insert` leave it resident?
+        Already-resident ids answer True; over-wide records answer False.
+        ``next_use`` (aligned with ``ids``) carries each candidate's next
+        use — for a prefetch plan that is its *upcoming window use*, for
+        a demand insert its position in the next epoch's stream."""
+        ids = np.asarray(ids, np.int64)
+        with self._lock:
+            out = self._slot_of[ids] >= 0
+            fresh = ~out & (self.record_lengths[ids] <= self.slot_bytes)
+            idx = np.flatnonzero(fresh)
+            if len(idx) == 0 or self.capacity == 0:
+                return out
+            uniq, first = np.unique(ids[idx], return_index=True)
+            nu = None
+            if next_use is not None:
+                nu = np.asarray(next_use, np.int64)[idx][first]
+            take = self._admission_locked(nu, len(uniq))
+            admitted = uniq[take]
+            mask = np.zeros(len(self._slot_of), bool)
+            mask[admitted] = True
+            out[idx] = mask[ids[idx]]
+            return out
+
     # ------------------------------------------------------------- gather
     def gather(
         self, ids: np.ndarray, dst: np.ndarray, dst_off: np.ndarray
@@ -224,7 +315,14 @@ class TieredCache:
             return hit
 
     # ------------------------------------------------------------- insert
-    def insert(self, ids: np.ndarray, src: np.ndarray, src_off: np.ndarray) -> int:
+    def insert(
+        self,
+        ids: np.ndarray,
+        src: np.ndarray,
+        src_off: np.ndarray,
+        next_use: Optional[np.ndarray] = None,
+        filtered: bool = False,
+    ) -> int:
         """Copy records into the cache from a flat uint8 source (a batch
         arena or dense buffer); returns how many were newly inserted.
 
@@ -232,20 +330,44 @@ class TieredCache:
         prefetch race), records wider than a slot are rejected, and when
         free + evictable slots run out (everything else pinned) the
         overflow is dropped rather than ever exceeding the budget.
+
+        ``filtered=True`` is the planner's admission-filtered insert: the
+        same rule :meth:`admit` answers for is applied under this one
+        lock, declined records are counted in ``planned_skips`` (never
+        ``rejected`` — by construction the admitted set always fits), and
+        ``next_use`` (aligned with ``ids``) both drives the belady
+        exchange and freshens the admitted records' eviction priorities.
         """
         ids = np.asarray(ids, np.int64)
         src_off = np.asarray(src_off, np.int64)
         if len(ids) == 0 or self.capacity == 0:
             return 0
+        if next_use is not None:
+            next_use = np.asarray(next_use, np.int64)
         with self._lock:
             uniq, first = np.unique(ids, return_index=True)
             keep = self._slot_of[uniq] < 0
             lens = self.record_lengths[uniq]
             keep &= lens <= self.slot_bytes
             uniq, first, lens = uniq[keep], first[keep], lens[keep]
+            nu = next_use[first] if next_use is not None else None
             need = len(uniq)
             if need == 0:
                 return 0
+            if nu is not None:
+                # clairvoyant truth for the exchange below and for later
+                # evictions; harmless for candidates that end up declined
+                self.next_use[uniq] = nu
+            if filtered:
+                take = self._admission_locked(nu, need)
+                k = int(take.sum())
+                if k < need:
+                    self.planned_skips += need - k
+                    self.planned_skip_bytes += int(lens[~take].sum())
+                    uniq, first, lens = uniq[take], first[take], lens[take]
+                    need = k
+                if need == 0:
+                    return 0
             if need > len(self._free):
                 self._evict_locked(need - len(self._free))
             k = min(need, len(self._free))

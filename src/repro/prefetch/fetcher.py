@@ -20,6 +20,16 @@ the cache while the trainer consumes the current one.  Demand misses
 and fill the cache on the way out; the cache's insert idempotency makes
 the demand/prefetch race harmless.
 
+With the policy-aware **planner** on (default for a Belady tier), every
+cache insert is admission-filtered: the demand path prices each served
+record at its *next-epoch* use position (``scheduler.next_use_after``)
+so the cache only retains records that beat a resident's reuse, and the
+prefetch worker re-probes admission (``cache.admit``) immediately
+before issuing its read, dropping records the cache would decline —
+records the planner skipped are *expected misses* on the demand side:
+they were never in flight, the plan-completion event still fires for
+the batch, and the ordinary miss path reads them exactly once.
+
 Accounting: demand-time DRAM-served records are counted in
 ``store.stats.cache_hits`` / ``cache_hit_bytes`` (so ``records_per_io``
 keeps meaning "storage records per storage I/O"), while the scheduler's
@@ -73,6 +83,7 @@ class PrefetchingFetcher:
         max_epochs: Optional[int] = None,
         cache: Optional[TieredCache] = None,
         policy: str = "lru",
+        planner: Optional[bool] = None,
     ):
         if mode == "auto":
             mode = "ragged" if store.variable else "dense"
@@ -98,7 +109,9 @@ class PrefetchingFetcher:
             lookahead=lookahead,
             start_epoch=start_epoch,
             max_epochs=max_epochs,
+            planner=planner,
         )
+        self.planner = self.scheduler.planner
         self._sched_lock = threading.Lock()
         self._queue: "queue.Queue" = queue.Queue()
         self._thread: Optional[threading.Thread] = None
@@ -111,6 +124,11 @@ class PrefetchingFetcher:
         self._closed = False
         self.prefetch_batches = 0   # plans executed with a storage read
         self.prefetch_records = 0   # records brought in by prefetch reads
+        # records the pre-read admission probe trimmed from in-flight
+        # plans (state drifted since plan time); their final — and only
+        # counted — admission decision happens at the demand insert
+        self.probe_skips = 0
+        self.probe_skip_bytes = 0
         self.last_error: Optional[BaseException] = None
 
     # --------------------------------------------------------- scheduling
@@ -170,36 +188,69 @@ class PrefetchingFetcher:
 
     def _execute(self, plan):
         need = plan.fetch
+        use_pos = plan.use_pos
         if need.size:
             # re-check residency at execution time: the demand path may
             # have read (and inserted) these records while the plan sat
             # in the queue
-            need = need[~self.cache.resident(need)]
+            alive = ~self.cache.resident(need)
+            need = need[alive]
+            if use_pos is not None:
+                use_pos = use_pos[alive]
+        if need.size and self.planner:
+            # admission probe *before* the read: a record the cache would
+            # decline (plan-time occupancy drifted — demand inserts landed
+            # in the meantime) must not be read here, or the demand path
+            # would read it a second time.  Dropping it now keeps every
+            # planner-skipped record a single, expected demand miss.
+            # Counted here (not in cache.planned_skips): the demand
+            # path's own filtered insert will run — and count — the
+            # final admission decision for these records exactly once.
+            ok = self.cache.admit(need, next_use=use_pos)
+            if not ok.all():
+                skipped = need[~ok]
+                self.probe_skips += len(skipped)
+                self.probe_skip_bytes += int(
+                    self.cache.record_lengths[skipped].sum()
+                )
+                need = need[ok]
+                if use_pos is not None:
+                    use_pos = use_pos[ok]
         if need.size == 0:
             return
         rb = self.store.read_batch_ragged(
             need, gap_bytes=self.gap_bytes, workers=self.workers
         )
-        self.cache.insert(need, rb.arena, rb.offsets)
+        self.cache.insert(
+            need, rb.arena, rb.offsets, next_use=use_pos, filtered=self.planner
+        )
         self.prefetch_batches += 1
         self.prefetch_records += len(need)
 
     # -------------------------------------------------------------- serve
     def __call__(self, indices: np.ndarray):
         idx = np.asarray(indices, np.int64)
+        key = batch_key(idx)
         with self._sched_lock:
             if not self.scheduler.primed:
                 self._dispatch(self.scheduler.fill())
-            ev = self._plan_done.get(batch_key(idx))
+            ev = self._plan_done.get(key)
+            # post-use priorities for the admission-filtered demand
+            # insert: each served record re-prices at its next-epoch use
+            nu = (
+                self.scheduler.next_use_after(idx, key)
+                if self.planner
+                else None
+            )
         if ev is not None:
             # this batch's prefetch is queued or running: wait for it
             # rather than issuing a duplicate storage read (timeout =
             # safety valve; the miss path below stays correct regardless)
             ev.wait(timeout=60.0)
         out = (
-            self._serve_dense(idx)
+            self._serve_dense(idx, nu)
             if self.mode == "dense"
-            else self._serve_ragged(idx)
+            else self._serve_ragged(idx, nu)
         )
         # serve first, then slide: the served batch's pins drop only
         # after its bytes are safely materialized.  Retirement is by
@@ -210,7 +261,7 @@ class PrefetchingFetcher:
             self._dispatch(self.scheduler.advance(idx))
         return out
 
-    def _serve_dense(self, indices) -> np.ndarray:
+    def _serve_dense(self, indices, nu=None) -> np.ndarray:
         idx = np.asarray(indices, np.int64)
         b = len(idx)
         rs = int(self.store.record_size)
@@ -233,7 +284,13 @@ class PrefetchingFetcher:
                 self.store.read_batch_into(
                     idx, out=out, gap_bytes=self.gap_bytes, workers=self.workers
                 )
-                self.cache.insert(idx, out.reshape(-1), dst_off)
+                self.cache.insert(
+                    idx,
+                    out.reshape(-1),
+                    dst_off,
+                    next_use=nu,
+                    filtered=self.planner,
+                )
             elif miss.any():
                 tmp = self.store.read_batch_into(
                     idx[miss], gap_bytes=self.gap_bytes, workers=self.workers
@@ -244,6 +301,8 @@ class PrefetchingFetcher:
                     idx[miss],
                     tmp.reshape(-1),
                     np.arange(len(tmp), dtype=np.int64) * rs,
+                    next_use=nu[miss] if nu is not None else None,
+                    filtered=self.planner,
                 )
             # fully-resident batches take the hit side of the handoff:
             # one gather, cache arena → ring slot, zero scratch copies
@@ -255,7 +314,7 @@ class PrefetchingFetcher:
                 self.ring.recycle(out)  # failed fetch must not drain the ring
             raise
 
-    def _serve_ragged(self, indices) -> RaggedBatch:
+    def _serve_ragged(self, indices, nu=None) -> RaggedBatch:
         idx = np.asarray(indices, np.int64)
         b = len(idx)
         lens = self.store.lengths()[idx] if b else np.empty(0, np.int64)
@@ -276,7 +335,9 @@ class PrefetchingFetcher:
                     workers=self.workers,
                     out=(arena, out_off, out_len),
                 )
-                self.cache.insert(idx, arena, dst_off)
+                self.cache.insert(
+                    idx, arena, dst_off, next_use=nu, filtered=self.planner
+                )
             elif miss.any():
                 rb = self.store.read_batch_ragged(
                     idx[miss], gap_bytes=self.gap_bytes, workers=self.workers
@@ -285,7 +346,13 @@ class PrefetchingFetcher:
                 copy_records(
                     rb.arena, rb.offsets, arena, dst_off[miss], rb.lengths
                 )
-                self.cache.insert(idx[miss], rb.arena, rb.offsets)
+                self.cache.insert(
+                    idx[miss],
+                    rb.arena,
+                    rb.offsets,
+                    next_use=nu[miss] if nu is not None else None,
+                    filtered=self.planner,
+                )
             if nh:
                 self.store.stats.account_cache_hits(
                     nh, int(lens[hit].sum())

@@ -16,6 +16,20 @@ produce for it:
 * everything else becomes the plan's ``fetch`` array, coalesced later by
   the record store's shared ``_sorted_plan`` cut rule.
 
+The **policy-aware planner** (``planner=True``, the default whenever the
+tier evicts by Belady) adds an occupancy simulation on top: the
+scheduler replays the cache's admission decision forward along the index
+stream it already knows, and drops *doomed* records from plans — records
+whose simulated residency would end before their use (no slot will exist
+for them once the window's pinned working set is accounted), which the
+unplanned path would read, fail to insert, and read again on demand.
+Doomed records are counted in ``doomed_records`` and left to the demand
+path as *expected misses* (read exactly once, admission-filtered at
+insert).  The planner also prices every planned record's *upcoming use*
+position and every served record's *next-epoch* position
+(:meth:`next_use_after`), so the cache's admission exchange runs on
+exact clairvoyant priorities rather than arrival order.
+
 The scheduler is pure bookkeeping (no threads, no I/O): the
 :class:`~repro.prefetch.fetcher.PrefetchingFetcher` drives it and
 executes its plans.
@@ -52,6 +66,12 @@ class PrefetchPlan:
     batch: np.ndarray        # the batch's record indices, as yielded
     fetch: np.ndarray        # deduplicated subset that needs a storage read
     fetch_bytes: int         # payload bytes the fetch will bring in
+    # the planner's admission priority for each fetch record: the
+    # absolute stream position of its next use *after* the window use it
+    # is being prefetched for (its retention merit — the window use
+    # itself is protected by the pin).  None when the planner is off or
+    # the shuffler exposes no index stream.
+    use_pos: Optional[np.ndarray] = None
 
 
 class LookaheadScheduler:
@@ -72,6 +92,7 @@ class LookaheadScheduler:
         start_epoch: int = 0,
         max_epochs: Optional[int] = None,
         record_lengths: Optional[np.ndarray] = None,
+        planner: Optional[bool] = None,
     ):
         self.shuffler = shuffler
         self.cache = cache
@@ -97,8 +118,21 @@ class LookaheadScheduler:
             and getattr(cache, "policy", "lru") == "belady"
             and hasattr(shuffler, "epoch_index_stream")
         )
+        # the policy-aware planner: simulate the admission decision at
+        # plan time and drop doomed records.  Default on exactly when the
+        # simulation can be exact — a Belady tier fed by a clairvoyant
+        # index stream; explicit planner=True on an lru tier still gets
+        # the occupancy cap (admission there is a capacity check only).
+        if planner is None:
+            planner = self._track_next_use
+        self.planner = bool(planner) and cache is not None
         self._epoch_pos: Dict[int, np.ndarray] = {}
         self._pinned = 0       # distinct records currently pinned, summed
+        # simulated pinned-slot occupancy: for every live window batch,
+        # the records that will sit pinned in the cache for it (resident
+        # at admission + planned fetches).  What remains of ``capacity``
+        # is the room a plan's insert will actually find.
+        self._sim_occupancy = 0
         self._pending: Optional[Tuple[int, int, np.ndarray]] = None
         self.primed = False
         # admission-time accounting: a "window hit" is a record that was
@@ -109,6 +143,12 @@ class LookaheadScheduler:
         self.window_hit_bytes = 0
         self.planned_records = 0
         self.planned_bytes = 0
+        # records the planner dropped from plans at plan time (doomed:
+        # the occupancy simulation found no slot for them) — still
+        # charged as storage reads in ``planned_records`` (the demand
+        # path reads them once), tracked separately for visibility
+        self.doomed_records = 0
+        self.doomed_bytes = 0
         self._window: deque = deque()
         self._stream: Iterator[Tuple[int, int, np.ndarray]] = self._gen(
             start_epoch
@@ -177,6 +217,23 @@ class LookaheadScheduler:
             # the overflow would be read, rejected by insert, and read
             # again on demand; leave it to the (single) demand read
             to_plan = min(to_plan, max(0, limit - self._pinned))
+        if self.planner:
+            # occupancy simulation: every live plan's insert lands pinned,
+            # so the room this plan's insert will find is capacity minus
+            # the window's simulated pinned-slot footprint.  Anything
+            # beyond it is doomed — read, declined (or rejected) at
+            # insert, and read again on demand — so it is dropped here
+            # and served by the (single, admission-filtered) demand read.
+            to_plan = min(
+                to_plan,
+                max(0, self.cache.capacity - self._sim_occupancy),
+            )
+            if to_plan < len(fetch):
+                self.doomed_records += len(fetch) - to_plan
+                if self._lengths is not None:
+                    self.doomed_bytes += int(
+                        self._lengths[fetch[to_plan:]].sum()
+                    )
         self._window_count[uniq] += 1
         self._pinned += len(uniq)
         if self.cache is not None:
@@ -191,11 +248,36 @@ class LookaheadScheduler:
         if self._lengths is not None:
             self.planned_bytes += int(self._lengths[fetch].sum())
         fetch = fetch[:to_plan]
+        use_pos = None
+        if self.planner and self._track_next_use and len(fetch):
+            # the doom rule proper: price each candidate at its *post-use*
+            # reuse (its position in the next epoch's stream) and replay
+            # the cache's admission exchange on that priority.  A loser's
+            # simulated residency ends right after its pinned window use —
+            # it would displace a resident with a *sooner* reuse (a future
+            # retention hit) only to be evicted before its own — so it is
+            # dropped from the plan and demand-read exactly once.  Winners
+            # carry the same priority into the insert, which re-runs the
+            # identical exchange under the cache lock.
+            tbl = self._next_epoch_pos(epoch + 1)
+            use_pos = (
+                np.full(len(fetch), NEVER, np.int64)
+                if tbl is None
+                else (epoch + 1) * self.shuffler.num_items + tbl[fetch]
+            )
+            ok = self.cache.admit(fetch, next_use=use_pos)
+            if not ok.all():
+                self.doomed_records += int((~ok).sum())
+                if self._lengths is not None:
+                    self.doomed_bytes += int(self._lengths[fetch[~ok]].sum())
+                fetch, use_pos = fetch[ok], use_pos[ok]
+        occ = len(resident) + len(fetch)
+        self._sim_occupancy += occ
         nbytes = (
             int(self._lengths[fetch].sum()) if self._lengths is not None else 0
         )
-        self._window.append((epoch, seq, uniq, batch_key(batch)))
-        return PrefetchPlan(epoch, seq, batch, fetch, nbytes)
+        self._window.append((epoch, seq, uniq, batch_key(batch), occ))
+        return PrefetchPlan(epoch, seq, batch, fetch, nbytes, use_pos)
 
     def _top_up(self) -> List[PrefetchPlan]:
         """Admit batches until the window holds ``lookahead`` of them, the
@@ -257,10 +339,11 @@ class LookaheadScheduler:
                 if entry[3] == key:
                     pos = j
                     break
-        epoch, _, uniq, _ = self._window[pos]
+        epoch, _, uniq, _, occ = self._window[pos]
         del self._window[pos]
         self._window_count[uniq] -= 1
         self._pinned -= len(uniq)
+        self._sim_occupancy -= occ
         if self.cache is not None:
             self.cache.unpin(uniq)
             if served and self._track_next_use:
@@ -272,6 +355,31 @@ class LookaheadScheduler:
                     uniq,
                     NEVER if tbl is None else (epoch + 1) * n + tbl[uniq],
                 )
+
+    def next_use_after(
+        self, indices: np.ndarray, key: Optional[Tuple[int, ...]] = None
+    ) -> Optional[np.ndarray]:
+        """Post-use Belady priorities for a batch being *served*: each
+        record's absolute position in the following epoch's stream
+        (``NEVER`` when the stream ends first), aligned with ``indices``.
+        The admission-filtered demand insert runs its exchange on these,
+        so a record only displaces a resident whose reuse is farther.
+        The batch's epoch comes from its window entry (by ``key``,
+        falling back to the head); ``None`` when clairvoyant positions
+        are unavailable (no Belady tier, or no index stream)."""
+        if not self._track_next_use or not self._window:
+            return None
+        k = key if key is not None else batch_key(indices)
+        epoch = self._window[0][0]
+        for entry in self._window:
+            if entry[3] == k:
+                epoch = entry[0]
+                break
+        ids = np.asarray(indices, np.int64)
+        tbl = self._next_epoch_pos(epoch + 1)
+        if tbl is None:
+            return np.full(len(ids), NEVER, np.int64)
+        return (epoch + 1) * self.shuffler.num_items + tbl[ids]
 
     def fill(self) -> List[PrefetchPlan]:
         """Prime the window; returns the new plans in admission order."""
@@ -305,6 +413,7 @@ class LookaheadScheduler:
             self._retire(served=False)
         self._window_count[:] = 0
         self._pinned = 0
+        self._sim_occupancy = 0
         self._pending = None
         self._epoch_pos.clear()
         if self._track_next_use:

@@ -22,8 +22,6 @@ import math
 import re
 from typing import Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ModelConfig

@@ -84,6 +84,54 @@ def belady_hit_fraction(c: float, window_frac: float = 0.0) -> float:
     return min(1.0, max(0.0, c))
 
 
+def wasted_read_fraction(
+    c: float,
+    policy: str = "belady",
+    batch_frac: float = 0.0,
+    planner: bool = True,
+    window_frac: float = 0.0,
+) -> float:
+    """Fraction of an epoch's records the tier reads from storage *beyond*
+    the policy's steady-state miss floor ``(1 − hit(c)) · n`` — the price
+    of admission decided by arrival order instead of by reuse.
+
+    With the policy-aware planner on, waste is identically **0**: every
+    plan is occupancy-simulated before the read, every insert is
+    admission-filtered (a record only displaces a resident with a
+    *farther* reuse), and every skipped record is a single expected
+    demand miss — so per-epoch storage reads are exactly the misses.
+    Under ``belady`` the hit floor itself is exact (``hit = c``), making
+    the planner-on read count ``(1 − c)·n`` exactly; under ``lru`` the
+    same holds around that policy's own closed form.
+
+    Planner-off, the unfiltered insert admits incoming records in
+    arrival order and lets eviction clean up afterwards.  While the
+    cache is wider than a batch (``c ≥ batch_frac``) the pinned-window
+    machinery absorbs this and waste stays ~0; *below* it (the regime
+    where ``TieredCache.rejected`` blows up: a single batch overwhelms
+    free + evictable slots) arrival-order admission churns the retained
+    set wholesale — each batch's overflow evicts or rejects exactly the
+    soon-reuse residents the policy meant to keep, the cross-epoch
+    retention benefit collapses to ~0, and the epoch reads ~``n``
+    records instead of ``(1 − hit(c))·n``.  The forfeited fraction *is*
+    the modeled hit rate:
+
+        wasted(c) = hit(c)        for c < batch_frac, planner off
+                  = 0             otherwise
+
+    Validated against the record-granularity ``LRUPageCache`` /
+    ``BeladyPageCache`` simulators (admission-exact by construction:
+    their reads equal their misses, the planner-on floor) and against
+    the live tier's per-epoch storage reads in
+    ``benchmarks/prefetch.py --policy-sweep`` (wasted-bytes column).
+    """
+    if planner:
+        return 0.0
+    if batch_frac > 0.0 and c < batch_frac:
+        return cache_hit_model(c, policy, window_frac)
+    return 0.0
+
+
 def cache_hit_model(
     c: float, policy: str = "lru", window_frac: float = 0.0
 ) -> float:

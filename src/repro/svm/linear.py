@@ -12,7 +12,6 @@ is the paper's *relative function value difference* (f − f*)/f*.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Iterator, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,16 +11,13 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
-from pathlib import Path
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
 
 from repro.core.pipeline import InputPipeline
 from repro.core.shuffler import BMFShuffler, LIRSShuffler, TFIPShuffler
-from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import AdamW, AdamWConfig

@@ -9,7 +9,6 @@ with f32 params it behaves like a standard AdamW.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,8 @@ class AdamW:
 
     # -------------------------------------------------------------- init
     def init(self, params):
-        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def f32(p):
+            return jnp.zeros(p.shape, jnp.float32)
         state = {
             "mu": jax.tree_util.tree_map(f32, params),
             "nu": jax.tree_util.tree_map(f32, params),

@@ -4,8 +4,7 @@ dry-run lowers/compiles.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ and the shard_map compressed psum."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypo import given, settings, st
 
 from repro.train.compression import (

@@ -79,8 +79,6 @@ def test_lower_compile_smoke(arch, shape_kind):
 
 def test_unrolled_matches_scanned_semantics():
     """scan_layers=False must be numerically identical to the scan form."""
-    import jax.numpy as jnp
-
     from repro.models import model as M
 
     # f32 compute so scan-vs-unroll accumulation is bitwise comparable
@@ -95,8 +93,6 @@ def test_unrolled_matches_scanned_semantics():
 
 def test_sequence_parallel_preserves_loss():
     """SP is a sharding hint — numerics must be identical under a mesh."""
-    import jax.numpy as jnp
-
     from repro.layers.common import ShardCtx
     from repro.models import model as M
 

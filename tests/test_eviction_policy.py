@@ -178,9 +178,9 @@ def test_batch_bytes_identical_across_eviction_policies(
     fixed_store, variable_store, kind, producers, batch, lookahead,
     budget_pct, seed,
 ):
-    """The acceptance contract: {off, lru, belady} produce byte-identical
-    batches for 3 epochs, dense and ragged, single- and multi-producer,
-    at any budget/lookahead geometry."""
+    """The acceptance contract: {off, lru, belady} × {planner on, off}
+    produce byte-identical batches for 3 epochs, dense and ragged,
+    single- and multi-producer, at any budget/lookahead geometry."""
     store, _ = fixed_store if kind == "dense" else variable_store
     sh = LIRSShuffler(store.num_records, batch, seed=seed)
     base = _epoch_bytes(
@@ -194,23 +194,29 @@ def test_batch_bytes_identical_across_eviction_policies(
     )
     budget = int(store.file_size * budget_pct / 100)
     for policy in ("lru", "belady"):
-        with PrefetchingFetcher(
-            store,
-            sh,
-            budget_bytes=budget,
-            lookahead=lookahead,
-            workers=2,
-            policy=policy,
-        ) as f:
-            got = _epoch_bytes(
-                InputPipeline(
-                    f.batch_iter, f, prefetch=2, num_producers=producers
-                ),
-                epochs=3,
+        for planner in (True, False):
+            with PrefetchingFetcher(
+                store,
+                sh,
+                budget_bytes=budget,
+                lookahead=lookahead,
+                workers=2,
+                policy=policy,
+                planner=planner,
+            ) as f:
+                got = _epoch_bytes(
+                    InputPipeline(
+                        f.batch_iter, f, prefetch=2, num_producers=producers
+                    ),
+                    epochs=3,
+                )
+                assert f.last_error is None
+                assert f.cache.stray_unpins == 0
+                if planner:
+                    assert f.cache.rejected == 0
+            assert got == base, (
+                f"policy {policy} planner={planner} changed served bytes"
             )
-            assert f.last_error is None
-            assert f.cache.stray_unpins == 0
-        assert got == base, f"policy {policy} changed served bytes"
 
 
 # --------------------------------------------------- TieredCache unit level

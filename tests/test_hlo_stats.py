@@ -1,6 +1,4 @@
 """HLO collective parser + dry-run helper units."""
-import numpy as np
-
 from repro.launch.hlo_stats import _shape_bytes, collective_stats, op_histogram
 
 SAMPLE = """
@@ -55,9 +53,6 @@ def test_op_histogram():
 
 def test_with_repeats_and_sites():
     # pure-config helpers from the dry-run (no jax device state touched)
-    import importlib.util as iu
-    import sys
-
     from repro.configs import get_config
 
     # avoid importing repro.launch.dryrun (it sets XLA_FLAGS); replicate its

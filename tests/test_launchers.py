@@ -1,5 +1,4 @@
 """CLI launcher smoke tests: the production entry points run end-to-end."""
-import json
 
 import numpy as np
 import pytest

@@ -315,14 +315,15 @@ def _epoch_bytes(pipe, epochs):
     return out
 
 
+@pytest.mark.parametrize("planner", [False, True])
 @pytest.mark.parametrize("producers", [1, 3])
 @pytest.mark.parametrize("kind", ["dense", "ragged"])
 def test_prefetch_on_off_batches_byte_identical(
-    fixed_store, variable_store, kind, producers
+    fixed_store, variable_store, kind, producers, planner
 ):
     """The tentpole determinism contract: 3 epochs of batches are
     byte-identical with the tiered read path on or off, dense and ragged,
-    single- and multi-producer."""
+    single- and multi-producer, with and without the prefetch planner."""
     store, _ = fixed_store if kind == "dense" else variable_store
     sh = LIRSShuffler(store.num_records, 32, seed=5)
     base = _epoch_bytes(
@@ -337,7 +338,8 @@ def test_prefetch_on_off_batches_byte_identical(
     # ~30% budget, small lookahead, background worker on
     budget = int(store.file_size * 0.3)
     with PrefetchingFetcher(
-        store, sh, budget_bytes=budget, lookahead=5, workers=2
+        store, sh, budget_bytes=budget, lookahead=5, workers=2,
+        planner=planner,
     ) as f:
         got = _epoch_bytes(
             InputPipeline(

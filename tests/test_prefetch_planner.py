@@ -1,0 +1,375 @@
+"""Policy-aware prefetch planner: admission-filtered lookahead contracts.
+
+The planner's promise, in counters:
+
+  * ``TieredCache.rejected == 0`` with the planner on — every insert is
+    admission-*decided* (``planned_skips``) before it could ever be
+    slot-starved, across both eviction policies, even on a tiny-budget
+    stress stream where a single batch dwarfs the cache;
+  * demand re-reads of planner-skipped (doomed) records are charged
+    **exactly once** in ``IOStats`` (the PR 2 retry-accounting bug
+    class): per epoch, storage batch records equal the scheduler's
+    planned+doomed charge — nothing is read twice, nothing vanishes;
+  * under ``belady`` the filtered tier achieves the closed form
+    *exactly*: per-epoch storage reads are ``n − capacity``, matching
+    the ``BeladyPageCache`` record simulator on the same stream, and
+    ``wasted_read_fraction`` is 0;
+  * batch bytes are identical across {planner on, planner off} ×
+    {lru, belady} × {dense, ragged} (the suites in test_prefetch.py /
+    test_eviction_policy.py carry the same contract on their axes).
+
+Plus unit coverage of the admission exchange itself: free slots admit
+unconditionally, a sooner-next-use candidate displaces the farthest
+evictable resident, a farther (or tied) one is declined, and a filtered
+insert never increments ``rejected``.
+"""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import InputPipeline, store_fetch_fn
+from repro.core.shuffler import LIRSShuffler
+from repro.prefetch import NEVER, PrefetchingFetcher, TieredCache
+from repro.storage.devices import cache_hit_model, wasted_read_fraction
+from repro.storage.page_cache import BeladyPageCache
+from repro.storage.record_store import RecordStore, RecordWriter
+from tests._hypo import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def fixed_store(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("pl") / "fixed.rrec")
+    rng = np.random.default_rng(23)
+    recs = [rng.bytes(64) for _ in range(512)]
+    with RecordWriter(path, record_size=64) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    yield store, recs
+    store.close()
+
+
+@pytest.fixture(scope="module")
+def variable_store(tmp_path_factory):
+    from repro.core.location import LocationGenerator
+
+    path = str(tmp_path_factory.mktemp("pl") / "var.rrec")
+    rng = np.random.default_rng(24)
+    recs = [rng.bytes(int(rng.integers(4, 80))) for _ in range(512)]
+    with RecordWriter(path) as w:
+        for r in recs:
+            w.append(r)
+    store = RecordStore(path)
+    LocationGenerator().generate(store)
+    yield store, recs
+    store.close()
+
+
+# --------------------------------------------------- admission exchange unit
+def test_admission_admits_into_free_slots_unconditionally():
+    lengths = np.full(16, 8, np.int64)
+    cache = TieredCache(lengths, budget_bytes=8 * 4, policy="belady")
+    ids = np.arange(3, dtype=np.int64)
+    # even NEVER-priority candidates take free slots: caching into an
+    # empty slot can only add hits
+    ok = cache.admit(ids, next_use=np.full(3, NEVER, np.int64))
+    assert ok.all()
+
+
+def test_admission_exchange_prefers_sooner_next_use():
+    lengths = np.full(16, 8, np.int64)
+    cache = TieredCache(lengths, budget_bytes=8 * 4, policy="belady")
+    src = np.zeros(16 * 8, np.uint8)
+    off = np.arange(16, dtype=np.int64) * 8
+    resident = np.arange(4, dtype=np.int64)
+    cache.insert(resident, src, off[:4], next_use=np.array([10, 20, 30, 40]))
+    # greedy exchange, soonest candidates against farthest residents:
+    # candidate 5 (next use 15) beats the farthest resident (40);
+    # candidate 6 (next use 30) ties its pairing (30) and is declined —
+    # replacing a resident with an equally-priced newcomer is churn;
+    # candidate 7 (next use 99) loses outright
+    ok = cache.admit(np.array([5, 6, 7]), next_use=np.array([15, 30, 99]))
+    assert list(ok) == [True, False, False]
+    # already-resident ids answer True regardless of priority
+    assert cache.admit(resident[:1], next_use=np.array([NEVER]))[0]
+
+
+def test_filtered_insert_skips_are_not_rejections():
+    lengths = np.full(20, 8, np.int64)
+    cache = TieredCache(lengths, budget_bytes=8 * 4, policy="belady")
+    ids = np.arange(20, dtype=np.int64)
+    src = np.zeros(20 * 8, np.uint8)
+    off = np.arange(20, dtype=np.int64) * 8
+    cache.pin(ids[:4])
+    cache.insert(ids[:4], src, off[:4])  # 4 pinned residents fill the tier
+    n = cache.insert(
+        ids[4:],
+        src,
+        off[4:],
+        next_use=np.arange(16, dtype=np.int64),
+        filtered=True,
+    )
+    assert n == 0
+    assert cache.rejected == 0           # decided, not starved
+    assert cache.planned_skips == 16
+    assert cache.planned_skip_bytes == 16 * 8
+    # the unfiltered path on the same state still reports rejection
+    cache.insert(ids[4:], src, off[4:])
+    assert cache.rejected == 16
+
+
+def test_filtered_insert_evicts_exactly_the_exchange_losers():
+    lengths = np.full(12, 8, np.int64)
+    cache = TieredCache(lengths, budget_bytes=8 * 4, policy="belady")
+    src = np.zeros(12 * 8, np.uint8)
+    off = np.arange(12, dtype=np.int64) * 8
+    resident = np.arange(4, dtype=np.int64)
+    cache.insert(resident, src, off[:4], next_use=np.array([10, 20, 30, 40]))
+    cache.insert(
+        np.array([5, 6]),
+        src,
+        off[5:7],
+        next_use=np.array([15, 99]),
+        filtered=True,
+    )
+    # 5 (use 15) displaced the farthest resident (3, use 40); 6 declined
+    assert cache.resident(np.array([0, 1, 2, 5])).all()
+    assert not cache.resident(np.array([3, 6])).any()
+    assert cache.planned_skips == 1
+    assert cache.rejected == 0
+
+
+# ------------------------------------------------- tiny-budget stress stream
+@pytest.mark.parametrize("policy", ["lru", "belady"])
+def test_planner_rejected_zero_on_tiny_budget_stress(fixed_store, policy):
+    """A cache an order of magnitude narrower than one batch, hammered
+    for 3 epochs: the planner never lets an insert hit the reject path,
+    and never leaks a pin."""
+    store, recs = fixed_store
+    n = store.num_records
+    sh = LIRSShuffler(n, 128, seed=41)
+    with PrefetchingFetcher(
+        store, sh, budget_bytes=64 * 12, lookahead=6, workers=2,
+        policy=policy, planner=True,
+    ) as f:
+        assert f.planner
+        pipe = InputPipeline(f.batch_iter, f, prefetch=2, num_producers=2)
+        served = 0
+        for e in range(3):
+            for item in pipe.epoch(e):
+                served += len(item)
+        assert f.last_error is None
+        assert served == 3 * n
+        assert f.cache.rejected == 0
+        assert f.cache.stray_unpins == 0
+        # the planner actually made decisions on this stream
+        assert f.cache.planned_skips + f.scheduler.doomed_records > 0
+
+
+@pytest.mark.parametrize("policy", ["lru", "belady"])
+def test_planner_charges_demand_rereads_exactly_once(fixed_store, policy):
+    """The IOStats contract (PR 2 bug class): every planned record and
+    every doomed (planner-skipped, demand-read) record is charged to
+    ``batch_records`` exactly once — the storage-side count equals the
+    scheduler-side charge, so nothing is double-read or dropped."""
+    store, _ = fixed_store
+    n = store.num_records
+    sh = LIRSShuffler(n, 128, seed=42)
+    with PrefetchingFetcher(
+        store, sh, budget_bytes=64 * 24, lookahead=4,
+        policy=policy, planner=True, background=False,
+    ) as f:
+        # epoch 0 in stream order, inline plans: deterministic accounting
+        for idx in sh.epoch_batches(0):
+            f(idx)
+        store.stats.reset()
+        p0 = f.scheduler.planned_records
+        for e in (1, 2):
+            for idx in sh.epoch_batches(e):
+                f(idx)
+        charged = f.scheduler.planned_records - p0
+        if policy == "belady":
+            # exact: every planned/doomed record is read exactly once —
+            # the admission exchange always retains a window-dedup'd
+            # record to its (imminent) second use
+            assert store.stats.batch_records == charged
+        else:
+            # lru admission is merit-blind, so a record shared by two
+            # window batches across the epoch boundary can be declined
+            # after its first use and legitimately re-read at its second
+            # — each such re-read implies a decline, bounding the slack
+            assert store.stats.batch_records >= charged
+            assert (
+                store.stats.batch_records - charged
+                <= f.cache.planned_skips
+            )
+        assert store.stats.batch_records <= 2 * n  # never systematic
+        assert f.cache.rejected == 0
+
+
+def test_belady_planner_reads_exactly_misses_per_epoch(fixed_store):
+    """The acceptance floor, exactly: a planner-filtered Belady tier
+    reads ``n − capacity`` records per steady-state epoch — the closed
+    form ``hit = c`` with zero waste — and matches the BeladyPageCache
+    record simulator on the same stream."""
+    store, _ = fixed_store
+    n = store.num_records
+    cap = 64  # slots; budget = cap * record_size
+    sh = LIRSShuffler(n, 128, seed=43)
+    with PrefetchingFetcher(
+        store, sh, budget_bytes=64 * cap, lookahead=4,
+        policy="belady", planner=True, background=False,
+    ) as f:
+        for idx in sh.epoch_batches(0):
+            f(idx)
+        per_epoch = []
+        for e in (1, 2, 3):
+            store.stats.reset()
+            for idx in sh.epoch_batches(e):
+                f(idx)
+            per_epoch.append(store.stats.batch_records)
+    assert per_epoch[-1] == n - cap  # steady state: exactly the misses
+    assert all(r <= n for r in per_epoch)
+    # the offline MIN simulator agrees on the same stream and capacity
+    stream = np.concatenate([sh.epoch_index_stream(e) for e in range(4)])
+    sim = BeladyPageCache(cap)
+    sim.simulate(stream, warmup=3 * n)
+    assert sim.misses == n - cap
+
+
+def test_planner_off_matches_legacy_rejection_behavior(fixed_store):
+    store, _ = fixed_store
+    sh = LIRSShuffler(store.num_records, 128, seed=44)
+    with PrefetchingFetcher(
+        store, sh, budget_bytes=64 * 12, lookahead=4,
+        policy="belady", planner=False, background=False,
+    ) as f:
+        assert not f.planner
+        for idx in sh.epoch_batches(0):
+            f(idx)
+        assert f.cache.rejected > 0       # the pathology the planner fixes
+        assert f.cache.planned_skips == 0
+        assert f.scheduler.doomed_records == 0
+
+
+def test_planner_defaults_follow_policy(fixed_store):
+    store, _ = fixed_store
+    sh = LIRSShuffler(store.num_records, 64, seed=45)
+    bel = store_fetch_fn(
+        store, shuffler=sh, cache_budget_bytes=64 * 64,
+        eviction_policy="belady",
+    )
+    lru = store_fetch_fn(
+        store, shuffler=sh, cache_budget_bytes=64 * 64,
+        eviction_policy="lru",
+    )
+    forced = store_fetch_fn(
+        store, shuffler=sh, cache_budget_bytes=64 * 64,
+        eviction_policy="lru", prefetch_planner=True,
+    )
+    try:
+        assert bel.planner        # auto: on for a Belady tier
+        assert not lru.planner    # auto: off for lru
+        assert forced.planner     # explicit on wins
+    finally:
+        bel.close()
+        lru.close()
+        forced.close()
+
+
+# ---------------------------------------------- byte identity (planner axis)
+def _epoch_bytes(pipe, epochs):
+    out = []
+    for e in range(epochs):
+        for item in pipe.epoch(e):
+            if isinstance(item, np.ndarray):
+                out.append(bytes(item.reshape(-1)))
+            else:  # RaggedBatch
+                out.append(
+                    bytes(item.arena)
+                    + item.offsets.tobytes()
+                    + item.lengths.tobytes()
+                )
+    return out
+
+
+@pytest.mark.parametrize("kind", ["dense", "ragged"])
+@settings(max_examples=4, deadline=None)
+@given(
+    batch=st.integers(16, 96),
+    budget_slots=st.integers(4, 200),
+    seed=st.integers(0, 50),
+)
+def test_batches_identical_across_planner_axis(
+    fixed_store, variable_store, kind, batch, budget_slots, seed
+):
+    """The acceptance contract on the planner axis: {planner on, off} ×
+    {lru, belady} serve byte-identical batches for 3 epochs, dense and
+    ragged, at any budget geometry — the planner may only change what is
+    *cached*, never a served byte."""
+    store, _ = fixed_store if kind == "dense" else variable_store
+    sh = LIRSShuffler(store.num_records, batch, seed=seed)
+    base = _epoch_bytes(
+        InputPipeline(
+            lambda e: sh.epoch_batches(e), store_fetch_fn(store), prefetch=2
+        ),
+        epochs=3,
+    )
+    budget = budget_slots * int(store.lengths().max())
+    for policy in ("lru", "belady"):
+        for planner in (True, False):
+            with PrefetchingFetcher(
+                store, sh, budget_bytes=budget, lookahead=5, workers=2,
+                policy=policy, planner=planner,
+            ) as f:
+                got = _epoch_bytes(
+                    InputPipeline(f.batch_iter, f, prefetch=2), epochs=3
+                )
+                assert f.last_error is None
+                assert f.cache.rejected == 0 or not planner
+                assert f.cache.stray_unpins == 0
+            assert got == base, (
+                f"planner={planner} policy={policy} changed served bytes"
+            )
+
+
+# ------------------------------------------------- wasted-read closed form
+def test_wasted_read_fraction_closed_form():
+    b = 1024 / 32768
+    for c in (0.01, 0.05, 0.25, 1.0):
+        for policy in ("lru", "belady"):
+            # planner on: zero waste at every budget, both policies
+            assert wasted_read_fraction(c, policy, b, planner=True) == 0.0
+    # planner off, budget below one batch: retention forfeited wholesale
+    for c in (0.01, 0.02, 0.03):
+        assert wasted_read_fraction(
+            c, "belady", b, planner=False
+        ) == pytest.approx(cache_hit_model(c, "belady"))
+        assert wasted_read_fraction(
+            c, "lru", b, planner=False
+        ) == pytest.approx(cache_hit_model(c, "lru"))
+    # planner off, budget at/above one batch: the window machinery copes
+    for c in (b, 0.25, 1.0):
+        assert wasted_read_fraction(c, "belady", b, planner=False) == 0.0
+    # no batch information -> no waste claim
+    assert wasted_read_fraction(0.01, "belady", 0.0, planner=False) == 0.0
+
+
+def test_wasted_read_fraction_validates_against_simulators():
+    """The planner-on floor: an admission-exact cache (the simulators are
+    MIN / plain LRU by construction) reads exactly its misses — measured
+    hit matches the closed form, so waste is 0, the planner-on claim."""
+    from repro.storage.page_cache import LRUPageCache
+
+    n, batch = 2048, 128
+    sh = LIRSShuffler(n, batch, seed=46)
+    stream = np.concatenate([sh.epoch_index_stream(e) for e in range(4)])
+    for frac in (0.05, 0.25):
+        k = int(n * frac)
+        bel = BeladyPageCache(k).simulate(stream, warmup=3 * n)
+        assert bel == pytest.approx(
+            cache_hit_model(frac, "belady"), abs=1.5 / n
+        )
+        lru = LRUPageCache(k).simulate(stream, warmup=3 * n)
+        assert abs(lru - cache_hit_model(frac, "lru")) <= max(
+            0.02, 0.12 * cache_hit_model(frac, "lru")
+        )

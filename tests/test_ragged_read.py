@@ -217,7 +217,8 @@ def test_multi_producer_recycled_pipeline_is_deterministic(tmp_path, kind):
             for _ in range(n):
                 w.append(rng.bytes(48))
         store = RecordStore(path)
-        make_ring = lambda: BatchBufferRing(batch, 48, depth=8)
+        def make_ring():
+            return BatchBufferRing(batch, 48, depth=8)
     else:
         path = str(tmp_path / "r.rrec")
         with RecordWriter(path) as w:
@@ -225,7 +226,8 @@ def test_multi_producer_recycled_pipeline_is_deterministic(tmp_path, kind):
                 w.append(rng.bytes(int(rng.integers(0, 120))))
         store = RecordStore(path)
         LocationGenerator().generate(store)
-        make_ring = lambda: RaggedBufferRing(batch * 130, batch, depth=8)
+        def make_ring():
+            return RaggedBufferRing(batch * 130, batch, depth=8)
 
     def run(producers):
         ring = make_ring()

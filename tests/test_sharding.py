@@ -4,7 +4,6 @@ logic.  Catches sharding-rule regressions without compiling."""
 import math
 from types import SimpleNamespace
 
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config

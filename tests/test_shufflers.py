@@ -1,6 +1,5 @@
 """Shuffler semantics: coverage, page cohesion, window limits, BMF blocks."""
 import numpy as np
-import pytest
 from _hypo import given, settings, st
 
 from repro.core.shuffler import BMFShuffler, LIRSShuffler, TFIPShuffler

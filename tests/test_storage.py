@@ -1,8 +1,6 @@
 """Record store + location generator + page cache + device models."""
-import struct
 
 import numpy as np
-import pytest
 from _hypo import given, settings, st
 
 from repro.core.location import LocationGenerator

@@ -5,11 +5,9 @@ import pytest
 
 pytestmark = pytest.mark.slow  # heavy; excluded from tier-1 (see pytest.ini)
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.location import LocationGenerator
 from repro.data.synthetic import decode_token_batch, make_token_dataset
 from repro.storage.record_store import RecordStore
 from repro.train.checkpoint import CheckpointManager
