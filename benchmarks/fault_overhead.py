@@ -1,0 +1,177 @@
+"""fault_overhead — what the resilience scaffold costs on the clean path.
+
+The ISSUE's bar: the zero-fault hot path (RREC v2 + retry policy +
+``verify="auto"``) must stay within **2 %** of the bare v1 read path.
+Variants, timed interleaved (best-of per variant, same index batches):
+
+  * ``plain``        — v1 file, ``retry=None``, no checksum table: the
+                       pre-resilience seed read path.  Informational only:
+                       it is a *different file*, so page-cache temperature
+                       differs from the v2 variants.
+  * ``bare``         — the SAME v2 file with ``retry=None`` and
+                       ``verify="off"``: the apples-to-apples denominator.
+  * ``scaffold``     — v2 file, ``DEFAULT_RETRY``, ``verify="auto"``:
+                       the production configuration.  The gated number is
+                       ``scaffold_overhead_frac`` = scaffold/bare − 1.
+  * ``injected_seam``— scaffold + a zero-rate :class:`FaultInjector`
+                       under every pread (what chaos tests/benchmarks
+                       pay even when no fault fires).  Informational.
+  * ``verify_full``  — scaffold with every record checksummed per batch.
+                       Informational (the integrity-paranoid mode).
+  * ``chaos``        — scaffold + a ~3 % transient schedule and a tight
+                       backoff, i.e. reads that actually retry and
+                       re-verify.  Informational; also proves byte
+                       identity under injection outside the test suite.
+
+Every variant must return byte-identical batches (``byte_mismatches``
+is gated at exactly 0 by benchmarks/compare.py).  Emits JSON to
+benchmarks/results/fault_overhead.json and harness CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import cached
+from repro.storage.faults import (
+    DEFAULT_RETRY,
+    FaultInjector,
+    FaultSpec,
+    RetryPolicy,
+)
+from repro.storage.record_store import PAGE, RecordStore, write_records
+
+N_RECORDS = 8_192
+RECORD_SIZE = 4_096
+BATCH = 1_024
+N_BATCHES = 4
+WORKERS = 4
+GAP = 4 * PAGE
+REPS = 7
+OVERHEAD_GATE = 0.02  # the ISSUE's acceptance bar on scaffold_overhead_frac
+
+CHAOS_SPEC = FaultSpec(
+    seed=0, transient_rate=0.02, zero_read_rate=0.005, bitflip_rate=0.005
+)
+CHAOS_RETRY = RetryPolicy(max_retries=8, backoff_s=1e-4, backoff_cap_s=1e-3)
+
+
+def _bench(stores, batches):
+    """Interleaved best-of timing: one rep reads every batch through every
+    variant before the next rep starts, so drift hits all variants alike."""
+    best = {name: float("inf") for name in stores}
+    for _ in range(REPS):
+        for name, store in stores.items():
+            t0 = time.perf_counter()
+            for idx in batches:
+                store.read_batch_into(idx, gap_bytes=GAP, workers=WORKERS)
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
+def run(force: bool = False):
+    def compute():
+        tmp = tempfile.mkdtemp(prefix="fault_overhead_")
+        rng = np.random.default_rng(0)
+        recs = [rng.bytes(RECORD_SIZE) for _ in range(N_RECORDS)]
+        p1, p2 = f"{tmp}/v1.rrec", f"{tmp}/v2.rrec"
+        write_records(p1, recs, record_size=RECORD_SIZE, checksums=False)
+        write_records(p2, recs, record_size=RECORD_SIZE)
+
+        stores = {
+            "plain": RecordStore(p1, retry=None, verify="off"),
+            "bare": RecordStore(p2, retry=None, verify="off"),
+            "scaffold": RecordStore(p2, retry=DEFAULT_RETRY, verify="auto"),
+            "injected_seam": RecordStore(
+                p2, fault_injector=FaultInjector(FaultSpec()), verify="auto"
+            ),
+            "verify_full": RecordStore(p2, verify="full"),
+            "chaos": RecordStore(
+                p2,
+                fault_injector=FaultInjector(CHAOS_SPEC),
+                retry=CHAOS_RETRY,
+                verify="full",
+            ),
+        }
+        batches = [rng.permutation(N_RECORDS)[:BATCH] for _ in range(N_BATCHES)]
+
+        # correctness before speed: every variant, byte-identical batches
+        mismatches = 0
+        want = [
+            b"".join(recs[i] for i in idx) for idx in batches
+        ]
+        for store in stores.values():
+            for idx, w in zip(batches, want):
+                got = store.read_batch_into(
+                    idx, gap_bytes=GAP, workers=WORKERS
+                ).tobytes()
+                mismatches += got != w
+        chaos_stats = stores["chaos"].stats
+        chaos_counters = {
+            "injected": stores["chaos"]._injector.counters(),
+            "retries": chaos_stats.retries,
+            "checksum_failures": chaos_stats.checksum_failures,
+            "degraded_batches": chaos_stats.degraded_batches,
+        }
+
+        best = _bench(stores, batches)
+        total = BATCH * N_BATCHES
+        out = {
+            "num_records": N_RECORDS,
+            "record_size": RECORD_SIZE,
+            "batch": BATCH,
+            "workers": WORKERS,
+            "gap_bytes": GAP,
+            "byte_mismatches": int(mismatches),
+            "scaffold_overhead_frac": best["scaffold"] / best["bare"] - 1.0,
+            "overhead_gate": OVERHEAD_GATE,
+            "chaos_injection": chaos_counters,
+        }
+        for name, t in best.items():
+            out[f"{name}_records_per_s"] = total / t
+        for store in stores.values():
+            store.close()
+        return out
+
+    return cached("fault_overhead", compute, force)
+
+
+def rows():
+    res = run()
+    out = []
+    bare = res["bare_records_per_s"]
+    for name in (
+        "plain", "bare", "scaffold", "injected_seam", "verify_full", "chaos"
+    ):
+        rps = res[f"{name}_records_per_s"]
+        out.append(
+            (
+                f"fault_overhead/{name}",
+                1e6 / rps,  # us per record
+                f"{rps:,.0f} rec/s x{rps / bare:.3f} vs bare",
+            )
+        )
+    out.append(
+        (
+            "fault_overhead/scaffold_overhead_frac",
+            res["scaffold_overhead_frac"] * 1e6,  # harness wants a number
+            f"{res['scaffold_overhead_frac']:+.4f} (gate < "
+            f"{res['overhead_gate']:.2f}), byte_mismatches="
+            f"{res['byte_mismatches']}",
+        )
+    )
+    return out
+
+
+if __name__ == "__main__":
+    res = run(force=True)
+    for r in rows():
+        print(",".join(map(str, r)))
+    bad = (
+        res["byte_mismatches"] != 0
+        or res["scaffold_overhead_frac"] >= OVERHEAD_GATE
+    )
+    sys.exit(1 if bad else 0)

@@ -19,6 +19,7 @@ def main() -> None:
     from benchmarks import (
         batch_read,
         dnn_convergence,
+        fault_overhead,
         memory_overhead,
         page_aware,
         pipeline_throughput,
@@ -41,6 +42,7 @@ def main() -> None:
         "batch_read": batch_read,               # coalesced multi-queue engine
         "ragged_read": ragged_read,             # ragged arena engine (sparse)
         "prefetch": prefetch,                   # clairvoyant prefetch + DRAM tier
+        "fault_overhead": fault_overhead,       # resilience scaffold cost gate
         "roofline": roofline,                   # §Roofline (from dry-run)
     }
     if args.only:

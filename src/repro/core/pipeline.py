@@ -76,6 +76,25 @@ class PipelineStats:
         return self.t_comp + self.t_wait
 
 
+def _attach_context(e: BaseException, epoch: int, seq: int, producer: int):
+    """Structured error context for a producer-thread failure.
+
+    The pipeline re-raises the *original* exception exactly once in the
+    consumer's thread (type preserved — callers match on it), annotated
+    with where in the stream it happened: ``e.pipeline_context`` always,
+    and the message string too when the exception carries a plain string
+    arg (``OSError(errno, msg)`` styles keep their args untouched)."""
+    ctx = {"epoch": epoch, "batch_seq": seq, "producer": producer}
+    if getattr(e, "pipeline_context", None) is None:
+        e.pipeline_context = ctx
+        if len(e.args) == 1 and isinstance(e.args[0], str):
+            e.args = (
+                f"{e.args[0]} [pipeline: epoch={epoch} "
+                f"batch={seq} producer={producer}]",
+            )
+    return e
+
+
 class InputPipeline:
     def __init__(
         self,
@@ -123,15 +142,16 @@ class InputPipeline:
         stop = threading.Event()
 
         def producer():
+            seq = -1
             try:
-                for idx in self.batch_iter_fn(epoch):
+                for seq, idx in enumerate(self.batch_iter_fn(epoch)):
                     t0 = time.perf_counter()
                     data = self.fetch_fn(idx)
                     self.stats.add_load(time.perf_counter() - t0)
                     if not _put_until(q, data, stop):
                         return
             except Exception as e:  # pragma: no cover - surfaced to consumer
-                err.append(e)
+                err.append(_attach_context(e, epoch, seq, 0))
             finally:
                 _put_until(q, DONE, stop)
 
@@ -151,6 +171,9 @@ class InputPipeline:
             # poll once `stop` is set) before the store can be closed
             stop.set()
             th.join()
+            # recycle items the consumer never saw (producer death, early
+            # abandon) so a buffer ring doesn't leak its slots
+            self._drain_queue(q, DONE, wrapped=False)
         if err:
             raise err[0]
 
@@ -174,6 +197,7 @@ class InputPipeline:
         emitted = [0]  # == next sequence the consumer will yield
 
         def producer():
+            seq = -1
             try:
                 while not (stop.is_set() or err):
                     with src_lock:
@@ -196,7 +220,11 @@ class InputPipeline:
                     if not _put_until(q, (seq, data), stop):
                         return
             except Exception as e:
-                err.append(e)
+                err.append(
+                    _attach_context(
+                        e, epoch, seq, threads.index(threading.current_thread())
+                    )
+                )
             finally:
                 _put_until(q, DONE, stop)
 
@@ -243,8 +271,31 @@ class InputPipeline:
                 credit.notify_all()
             for th in threads:
                 th.join()
+            # recycle undelivered items (queue + reorder buffer) so a
+            # buffer ring survives producer death with all slots free
+            self._drain_queue(q, DONE, wrapped=True)
+            if self.recycle_fn is not None:
+                for data in pending.values():
+                    self.recycle_fn(data)
+                pending.clear()
         if err:
             raise err[0]
+
+    def _drain_queue(self, q: "queue.Queue", done_sentinel, wrapped: bool):
+        """Empty ``q`` after the producers quiesced, recycling every data
+        item left behind (``wrapped`` = items are ``(seq, data)`` pairs).
+        Without this, each producer death or abandoned epoch strands the
+        in-flight batches' ring slots forever."""
+        if self.recycle_fn is None:
+            return
+        while True:
+            try:
+                item = q.get_nowait()
+            except queue.Empty:
+                return
+            if item is done_sentinel:
+                continue
+            self.recycle_fn(item[1] if wrapped else item)
 
 
 def store_fetch_fn(

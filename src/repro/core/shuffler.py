@@ -64,6 +64,12 @@ class IOPlan:
     mean_record_bytes: float = 0.0
     cache_hit_fraction: float = 0.0
     eviction_policy: str = "lru"
+    # resilience pricing (StorageModel.t_tail): fraction of this plan's
+    # random reads expected to stall at the device's tail latency, and
+    # the hedged-read threshold if the reader arms hedging (None = no
+    # hedging; the full stall is paid)
+    straggler_frac: Optional[float] = None
+    hedge_timeout_s: Optional[float] = None
 
 
 def expected_coalescing_factor(

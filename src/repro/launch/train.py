@@ -16,6 +16,7 @@ import tempfile
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data.synthetic import decode_token_batch, make_token_dataset
+from repro.storage.faults import FaultInjector, FaultSpec
 from repro.storage.record_store import RecordStore
 from repro.train.loop import Trainer, TrainLoopConfig, make_shuffler
 from repro.train.optimizer import AdamWConfig
@@ -58,6 +59,16 @@ def build_argparser():
                          "stream and drop doomed records from prefetch "
                          "plans instead of reading them twice (auto = on "
                          "for belady, off for lru)")
+    ap.add_argument("--chaos", default="",
+                    help="fault-injection spec for the read path, e.g. "
+                         "'seed=1,transient=0.05,stall=0.01,stall_s=0.2' "
+                         "(see repro.storage.faults.FaultSpec.parse); "
+                         "empty = no injection")
+    ap.add_argument("--verify-checksums", default="auto",
+                    choices=["auto", "full", "off"],
+                    help="RREC v2 payload verification: auto (only "
+                         "retried/hedged extents — free on the clean "
+                         "path), full (every record), off")
     return ap
 
 
@@ -67,9 +78,11 @@ def main(argv=None):
     if args.smoke:
         cfg = cfg.replace(vocab_size=min(cfg.vocab_size, 512))
 
+    injector = (
+        FaultInjector(FaultSpec.parse(args.chaos)) if args.chaos else None
+    )
     if args.data:
-        store = RecordStore(args.data)
-        seq = args.seq_len
+        path = args.data
     else:
         d = tempfile.mkdtemp(prefix="lirs_data_")
         meta = make_token_dataset(
@@ -77,8 +90,11 @@ def main(argv=None):
             min(cfg.vocab_size, 512) if args.smoke else cfg.vocab_size,
             seed=args.seed,
         )
-        store = RecordStore(meta.path)
-        seq = args.seq_len
+        path = meta.path
+    store = RecordStore(
+        path, fault_injector=injector, verify=args.verify_checksums
+    )
+    seq = args.seq_len
 
     shuffler = make_shuffler(
         args.shuffler, store.num_records, args.batch, seed=args.seed,
@@ -160,7 +176,21 @@ def main(argv=None):
             "probe_skips": fetcher.probe_skips,
             "stray_unpins": fetcher.cache.stray_unpins,
             "scratch_copies": fetcher.cache.scratch_copies,
+            "invalidations": fetcher.cache.invalidations,
+            "plans_failed": fetcher.plans_failed,
+            "worker_restarts": fetcher.worker_restarts,
         }
+    st = store.stats
+    summary["io_resilience"] = {
+        "verify": store.verify,
+        "rrec_version": store.version,
+        "retries": st.retries,
+        "hedged_reads": st.hedged_reads,
+        "checksum_failures": st.checksum_failures,
+        "degraded_batches": st.degraded_batches,
+    }
+    if injector is not None:
+        summary["io_resilience"]["injected"] = injector.counters()
     print(json.dumps(summary, indent=1))
     return summary
 

@@ -140,6 +140,7 @@ class TieredCache:
         self.planned_skips = 0
         self.planned_skip_bytes = 0
         self.stray_unpins = 0  # unpins without a matching pin (a pairing bug)
+        self.invalidations = 0  # residents dropped by invalidate()
         # copies the serve path routed through an intermediate buffer
         # instead of the final destination (ring slot / caller buffer) —
         # the zero-copy handoff keeps these at 0 for fully-resident and
@@ -415,6 +416,28 @@ class TieredCache:
     def evict(self, m: int):
         with self._lock:
             self._evict_locked(m)
+
+    def invalidate(self, ids: np.ndarray) -> int:
+        """Forcibly drop ``ids`` from the tier (poisoned/partial plans:
+        a prefetch that died mid-insert may have left any subset of its
+        records resident, possibly with garbage bytes — after this, the
+        demand path re-reads them from storage).  Pins are left intact
+        (the scheduler's window bookkeeping still retires them); returns
+        the number of records actually dropped."""
+        ids = np.unique(np.asarray(ids, np.int64))
+        with self._lock:
+            slots = self._slot_of[ids]
+            here = slots >= 0
+            if not here.any():
+                return 0
+            drop_ids, drop_slots = ids[here], slots[here]
+            self._slot_of[drop_ids] = -1
+            self._id_of[drop_slots] = -1
+            self._free.extend(int(s) for s in drop_slots)
+            self._used_bytes -= int(self.record_lengths[drop_ids].sum())
+            n = len(drop_ids)
+            self.invalidations += n
+            return n
 
     def clear(self):
         with self._lock:

@@ -130,6 +130,11 @@ class PrefetchingFetcher:
         self.probe_skips = 0
         self.probe_skip_bytes = 0
         self.last_error: Optional[BaseException] = None
+        self.plans_failed = 0     # plans whose execution raised
+        self.worker_restarts = 0  # background thread respawns after a crash
+        self.plan_waits_timed_out = 0  # demand waits that hit the valve
+        # demand-wait safety valve (seconds); configurable mostly for tests
+        self.plan_wait_s = 60.0
 
     # --------------------------------------------------------- scheduling
     def batch_iter(self, epoch: int) -> Iterator[np.ndarray]:
@@ -157,7 +162,18 @@ class PrefetchingFetcher:
                 self._execute(p)
 
     def _ensure_thread(self):
-        if self._thread is None and not self._closed:
+        """Callers hold ``_sched_lock``.  Starts the worker on first use
+        and — graceful degradation — respawns it if a previous incarnation
+        died on something harsher than a per-plan exception (``SystemExit``
+        out of a pread worker, a crashed interpreter thread).  The queue
+        and plan-completion registry survive the crash, so queued plans
+        resume and no demand wait is left hanging."""
+        if self._closed:
+            return
+        if self._thread is not None and not self._thread.is_alive():
+            self._thread = None
+            self.worker_restarts += 1
+        if self._thread is None:
             self._thread = threading.Thread(
                 target=self._prefetch_loop,
                 name="prefetch-worker",
@@ -166,25 +182,52 @@ class PrefetchingFetcher:
             self._thread.start()
 
     def _prefetch_loop(self):
-        while True:
-            plan = self._queue.get()
-            try:
-                if plan is _STOP:
-                    return
+        plan = _STOP
+        try:
+            while True:
+                plan = self._queue.get()
                 try:
-                    self._execute(plan)
-                except BaseException as e:  # noqa: BLE001
-                    # a failed prefetch must not kill training: the
-                    # demand read of the same records will raise (or
-                    # succeed) in the consumer's own thread
-                    self.last_error = e
+                    if plan is _STOP:
+                        return
+                    try:
+                        self._execute(plan)
+                    except Exception as e:  # noqa: BLE001
+                        # a failed prefetch must not kill training: drop
+                        # whatever partial state the plan left in the tier
+                        # (garbage bytes must never be served) and let the
+                        # demand read of the same records raise — or
+                        # succeed — in the consumer's own thread
+                        self.last_error = e
+                        self.plans_failed += 1
+                        if plan.fetch.size:
+                            self.cache.invalidate(plan.fetch)
+                        self.store.stats.account_degraded(1)
+                    finally:
+                        with self._sched_lock:
+                            ev = self._plan_done.pop(
+                                batch_key(plan.batch), None
+                            )
+                        if ev is not None:
+                            ev.set()
                 finally:
-                    with self._sched_lock:
-                        ev = self._plan_done.pop(batch_key(plan.batch), None)
-                    if ev is not None:
-                        ev.set()
-            finally:
-                self._queue.task_done()
+                    self._queue.task_done()
+        except BaseException as e:  # noqa: BLE001
+            # the worker itself is dying (SystemExit etc.): drop whatever
+            # the in-flight plan half-inserted, release every demand
+            # waiter so nobody blocks on a dead thread, and leave a
+            # restart to the next _ensure_thread call
+            self.last_error = e
+            try:
+                if plan is not _STOP and plan.fetch.size:
+                    self.cache.invalidate(plan.fetch)
+            except Exception:  # noqa: BLE001 - best-effort cleanup
+                pass
+            with self._sched_lock:
+                pending = list(self._plan_done.values())
+                self._plan_done.clear()
+            for ev in pending:
+                ev.set()
+            raise
 
     def _execute(self, plan):
         need = plan.fetch
@@ -232,6 +275,12 @@ class PrefetchingFetcher:
         idx = np.asarray(indices, np.int64)
         key = batch_key(idx)
         with self._sched_lock:
+            if self.background and self._thread is not None:
+                # graceful degradation: a crashed worker is respawned here
+                # (the queue and registry survive), so one dead thread
+                # costs at most the plans it had in flight — the demand
+                # path below re-reads those
+                self._ensure_thread()
             if not self.scheduler.primed:
                 self._dispatch(self.scheduler.fill())
             ev = self._plan_done.get(key)
@@ -246,7 +295,9 @@ class PrefetchingFetcher:
             # this batch's prefetch is queued or running: wait for it
             # rather than issuing a duplicate storage read (timeout =
             # safety valve; the miss path below stays correct regardless)
-            ev.wait(timeout=60.0)
+            if not ev.wait(timeout=self.plan_wait_s):
+                self.plan_waits_timed_out += 1
+                self.store.stats.account_degraded(1)
         out = (
             self._serve_dense(idx, nu)
             if self.mode == "dense"

@@ -1,3 +1,9 @@
+from repro.storage.faults import (  # noqa: F401
+    CorruptRecordError,
+    FaultInjector,
+    FaultSpec,
+    RetryPolicy,
+)
 from repro.storage.record_store import (  # noqa: F401
     BatchBufferRing,
     RaggedBatch,

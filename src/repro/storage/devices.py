@@ -161,6 +161,12 @@ class StorageModel:
     # Table 2 rates are single-stream; NVM parallelism scales them until
     # the device's internal channels saturate.  HDDs seek serially.
     max_queue_depth: float = 1.0
+    # Tail latency: a ``straggler_frac`` of random reads stall for
+    # ``tail_latency_s`` beyond the IOPS-rate service time (GC pauses,
+    # die collisions, link retrains).  Zero by default so Table 2
+    # reproductions are unchanged; set both to price resilience.
+    tail_latency_s: float = 0.0
+    straggler_frac: float = 0.0
 
     # ------------------------------------------------------------- times
     def t_seq_read(self, nbytes: float) -> float:
@@ -188,6 +194,28 @@ class StorageModel:
         extra = max(0.0, pages - n_ios)
         qd = max(1.0, min(queue_depth, self.max_queue_depth))
         return n_ios / (self.rand_write_iops * qd) + extra / self.seq_write_iops
+
+    def t_tail(
+        self,
+        n_ios: float,
+        straggler_frac: float = None,
+        hedge_timeout_s: float = None,
+    ) -> float:
+        """Expected tail-latency cost of ``n_ios`` random reads.
+
+        Each straggler pays the device's ``tail_latency_s`` stall.  With
+        hedged reads armed (``hedge_timeout_s``), the wait is capped at
+        the hedge threshold plus one duplicate I/O at the random rate —
+        Dean & Barroso's tail-at-scale bound — whenever that is cheaper
+        than riding out the stall."""
+        f = self.straggler_frac if straggler_frac is None else straggler_frac
+        if n_ios <= 0 or f <= 0.0 or self.tail_latency_s <= 0.0:
+            return 0.0
+        stall = self.tail_latency_s
+        if hedge_timeout_s is not None:
+            hedged = hedge_timeout_s + 1.0 / self.rand_read_iops
+            stall = min(stall, hedged)
+        return n_ios * f * stall
 
     # --------------------------------------------------- IOPlan pricing
     def t_epoch_read(self, plan) -> float:
@@ -217,6 +245,11 @@ class StorageModel:
                 plan.epoch_rand_read_ios * miss,
                 plan.epoch_rand_read_bytes * miss,
                 queue_depth=getattr(plan, "queue_depth", 1.0),
+            )
+            t += self.t_tail(
+                plan.epoch_rand_read_ios * miss,
+                getattr(plan, "straggler_frac", None),
+                getattr(plan, "hedge_timeout_s", None),
             )
         return t
 

@@ -38,26 +38,67 @@ side.
 I/O accounting happens *after* the extent reads succeed: a batch that dies
 on a short ``pread`` and is retried by the caller is charged once, for the
 attempt that actually served records (see ``IOStats``).
+
+Fault tolerance (RREC v2, ``repro.storage.faults``): v2 files carry a
+per-record checksum table (u32 LE per record, appended after the payload;
+header flag bit1, bit2 = CRC32C vs zlib CRC32) that the batch gather paths
+verify — ``verify="auto"`` checks only records whose extents needed a
+retry or hedge (zero cost on the clean path), ``"full"`` checks
+everything.  A mismatch triggers ONE recovery re-read of the record
+(transient-fault-free by the injector's taxonomy) before raising a
+structured :class:`~repro.storage.faults.CorruptRecordError`.  Transient
+pread errors (EINTR/EAGAIN/EIO, and zero-length reads strictly before
+EOF) are healed by bounded exponential-backoff retries under a per-batch
+deadline; straggler extent chunks can be hedged (read twice, first
+finisher wins).  All of it is accounted in ``IOStats`` (``retries``,
+``hedged_reads``, ``checksum_failures``, ``degraded_batches``) and made
+deterministic/testable by the seed-driven ``FaultInjector`` seam under
+every pread.
 """
 from __future__ import annotations
 
 import os
 import struct
 import threading
-from concurrent.futures import ThreadPoolExecutor
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor
+from concurrent.futures import wait as _futures_wait
 from dataclasses import dataclass, field
 from typing import Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .faults import (
+    CHECKSUM_ALGORITHM,
+    DEFAULT_RETRY,
+    TRANSIENT_ERRNOS,
+    CancelledRead,
+    CorruptRecordError,
+    FaultInjector,
+    RetryPolicy,
+    TransientZeroRead,
+    checksum32,
+)
+
 MAGIC = b"RREC"
-VERSION = 1
+VERSION = 2  # current writer version (v2 = per-record checksum table)
+V1 = 1       # seed format: no integrity data
 HEADER = struct.Struct("<4sIIQQ4x")  # padded to 32 B
 HEADER_SIZE = 32
 assert HEADER.size == HEADER_SIZE
 PAGE = 4096  # OS virtual page size (paper §4.1)
 
 FLAG_VARIABLE = 1
+FLAG_CRC = 2      # a u32-LE per-record checksum table follows the payload
+FLAG_CRC32C = 4   # table algorithm: CRC32C (Castagnoli); else zlib CRC32
+
+
+def _is_transient(e: BaseException) -> bool:
+    """Transient read faults: retry is allowed to heal these."""
+    return (
+        isinstance(e, TransientZeroRead)
+        or getattr(e, "errno", None) in TRANSIENT_ERRNOS
+    )
 
 
 @dataclass
@@ -82,6 +123,10 @@ class IOStats:
     coalesced_records: int = 0   # records served by those merged syscalls
     cache_hits: int = 0          # records served from the DRAM tier instead
     cache_hit_bytes: int = 0     # payload bytes those hits avoided reading
+    retries: int = 0             # transient-fault re-attempts of an extent
+    hedged_reads: int = 0        # duplicate reads issued for straggler chunks
+    checksum_failures: int = 0   # records whose payload failed verification
+    degraded_batches: int = 0    # batches that needed retry/hedge/re-read
     _lock: threading.Lock = field(
         default_factory=threading.Lock, repr=False, compare=False
     )
@@ -159,6 +204,25 @@ class IOStats:
             self.cache_hits += records
             self.cache_hit_bytes += nbytes
 
+    # resilience counters: incremented as the events happen (not batched),
+    # so they reconcile against a FaultInjector's log even when a batch
+    # ultimately fails and charges no I/O
+    def account_retries(self, n: int = 1):
+        with self._lock:
+            self.retries += n
+
+    def account_hedges(self, n: int = 1):
+        with self._lock:
+            self.hedged_reads += n
+
+    def account_checksum_failures(self, n: int = 1):
+        with self._lock:
+            self.checksum_failures += n
+
+    def account_degraded(self, n: int = 1):
+        with self._lock:
+            self.degraded_batches += n
+
     @property
     def records_per_io(self) -> float:
         """Coalescing efficiency of the batch path (1.0 = no merging).
@@ -174,6 +238,8 @@ class IOStats:
             self.batch_records = self.batch_ios = 0
             self.coalesced_ios = self.coalesced_records = 0
             self.cache_hits = self.cache_hit_bytes = 0
+            self.retries = self.hedged_reads = 0
+            self.checksum_failures = self.degraded_batches = 0
 
 
 @dataclass
@@ -315,20 +381,41 @@ def alloc_ragged(
     return arena, out_off, out_len
 
 
-def _pread_full(fd: int, buf, offset: int):
+def _pread_full(
+    fd: int,
+    buf,
+    offset: int,
+    injector: Optional[FaultInjector] = None,
+    file_size: Optional[int] = None,
+    cancel: Optional[threading.Event] = None,
+    recovery: bool = False,
+):
     """``preadv`` into ``buf`` tolerating short reads.
 
     A single Linux read is capped at ~2 GiB, and coalescing can legally
     produce extents larger than that (e.g. a whole-dataset sequential
-    batch) — so continue from where the kernel stopped.  Zero bytes
-    before the buffer is full is a genuine EOF/corruption.
+    batch) — so continue from where the kernel stopped.  A zero-length
+    read is classified by cause: at or past ``file_size`` it is a genuine
+    EOF (the file is shorter than the plan believed — truncation, never
+    retryable); strictly before it, a transport hiccup raised as
+    :class:`TransientZeroRead` for the retry layer to heal.  When the
+    store carries a :class:`FaultInjector`, every pread flows through its
+    seam (``recovery=True`` marks checksum-mismatch re-reads, which skip
+    transient fault classes).
     """
     view = memoryview(buf).cast("B")
     total = len(view)
     done = 0
     while done < total:
-        got = os.preadv(fd, [view[done:]], offset + done)
+        if injector is not None:
+            got = injector.pread(
+                fd, view[done:], offset + done, cancel=cancel, recovery=recovery
+            )
+        else:
+            got = os.preadv(fd, [view[done:]], offset + done)
         if got <= 0:
+            if file_size is not None and offset + done < file_size:
+                raise TransientZeroRead(offset + done, done, total)
             raise IOError(
                 f"short read at {offset + done}: EOF after {done}/{total} bytes"
             )
@@ -336,16 +423,35 @@ def _pread_full(fd: int, buf, offset: int):
 
 
 class RecordWriter:
-    """Sequentially writes a record file (fixed or variable length)."""
+    """Sequentially writes a record file (fixed or variable length).
 
-    def __init__(self, path: str, record_size: Optional[int] = None):
+    By default writes RREC v2: each record's payload checksum
+    (:func:`~repro.storage.faults.checksum32` over the payload bytes,
+    length prefix excluded) is collected and appended after the payload
+    as a u32-LE table at :meth:`close`.  ``checksums=False`` reproduces
+    the v1 seed format byte-for-byte (no table, version 1).
+    """
+
+    def __init__(
+        self,
+        path: str,
+        record_size: Optional[int] = None,
+        checksums: bool = True,
+    ):
         self.path = path
         self.record_size = record_size
         self.count = 0
         self._f = open(path, "wb")
+        self._crcs: Optional[List[int]] = [] if checksums else None
+        self._version = VERSION if checksums else V1
         flags = 0 if record_size else FLAG_VARIABLE
+        if checksums:
+            flags |= FLAG_CRC
+            if CHECKSUM_ALGORITHM == "crc32c":
+                flags |= FLAG_CRC32C
+        self._flags = flags
         self._f.write(
-            HEADER.pack(MAGIC, VERSION, flags, 0, record_size or 0)
+            HEADER.pack(MAGIC, self._version, flags, 0, record_size or 0)
         )
 
     def append(self, data: bytes):
@@ -358,12 +464,20 @@ class RecordWriter:
         else:
             self._f.write(struct.pack("<I", len(data)))
             self._f.write(data)
+        if self._crcs is not None:
+            self._crcs.append(checksum32(data) & 0xFFFFFFFF)
         self.count += 1
 
     def close(self):
-        flags = 0 if self.record_size else FLAG_VARIABLE
+        if self._crcs is not None:
+            self._f.write(np.asarray(self._crcs, dtype="<u4").tobytes())
         self._f.seek(0)
-        self._f.write(HEADER.pack(MAGIC, VERSION, flags, self.count, self.record_size or 0))
+        self._f.write(
+            HEADER.pack(
+                MAGIC, self._version, self._flags, self.count,
+                self.record_size or 0,
+            )
+        )
         self._f.close()
 
     def __enter__(self):
@@ -374,21 +488,79 @@ class RecordWriter:
 
 
 class RecordStore:
-    """Random-access reader over a record file."""
+    """Random-access reader over a record file.
 
-    def __init__(self, path: str):
+    Resilience knobs:
+
+    ``fault_injector``
+        A :class:`~repro.storage.faults.FaultInjector` routed under every
+        pread (tests/benchmarks/``--chaos``); ``None`` = direct syscalls.
+    ``retry``
+        A :class:`~repro.storage.faults.RetryPolicy` (default: bounded
+        backoff, 30 s batch deadline, hedging off); ``None`` disables
+        retries entirely — any transient fault aborts the batch.
+    ``verify``
+        Checksum verification of gathered payloads against the RREC v2
+        table: ``"auto"`` (default) verifies only records whose extents
+        needed a retry or hedge — zero work on the clean path; ``"full"``
+        verifies every record on the batch paths (and :meth:`read`);
+        ``"off"`` never verifies.  v1 files have no table, so the
+        effective mode is ``"off"`` (``"full"`` on a v1 file raises).
+    """
+
+    def __init__(
+        self,
+        path: str,
+        *,
+        fault_injector: Optional[FaultInjector] = None,
+        retry: Optional[RetryPolicy] = DEFAULT_RETRY,
+        verify: str = "auto",
+    ):
+        if verify not in ("off", "auto", "full"):
+            raise ValueError(f"verify must be off|auto|full, got {verify!r}")
         self.path = path
         self._fd = os.open(path, os.O_RDONLY)
         raw = os.pread(self._fd, HEADER_SIZE, 0)
         magic, version, flags, count, rsize = HEADER.unpack(raw)
         if magic != MAGIC:
             raise ValueError(f"{path}: not a RREC file")
+        if version > VERSION:
+            raise ValueError(
+                f"{path}: RREC v{version} is newer than this reader (v{VERSION})"
+            )
         self.version = version
         self.variable = bool(flags & FLAG_VARIABLE)
         self.num_records = count
         self.record_size = rsize or None
         self.stats = IOStats()
         self.file_size = os.fstat(self._fd).st_size
+        self._injector = fault_injector
+        self.retry = retry
+        # v2 integrity: the checksum table sits after the payload, so the
+        # payload proper ends where the table starts (sequential scans
+        # must not parse table bytes as records)
+        self.checksums: Optional[np.ndarray] = None
+        self.payload_end = self.file_size
+        if flags & FLAG_CRC:
+            table_bytes = 4 * count
+            self.payload_end = self.file_size - table_bytes
+            file_algo = "crc32c" if flags & FLAG_CRC32C else "crc32"
+            if file_algo == CHECKSUM_ALGORITHM:
+                self.checksums = np.frombuffer(
+                    os.pread(self._fd, table_bytes, self.payload_end),
+                    dtype="<u4",
+                )
+            elif verify == "full":
+                raise ValueError(
+                    f"{path}: checksum table is {file_algo} but this host "
+                    f"computes {CHECKSUM_ALGORITHM}; cannot verify=full"
+                )
+        elif verify == "full":
+            raise ValueError(
+                f"{path}: RREC v{version} has no checksum table; "
+                "cannot verify=full"
+            )
+        self.verify = verify if self.checksums is not None else "off"
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pool_size = 0
         self._pool_lock = threading.Lock()
@@ -426,6 +598,125 @@ class RecordStore:
         self.offsets()
         return self._lengths
 
+    # -------------------------------------------------- fault tolerance
+    def _batch_deadline(self) -> Optional[float]:
+        pol = self.retry
+        if pol is None or pol.deadline_s is None:
+            return None
+        return time.monotonic() + pol.deadline_s
+
+    def _retry_extent(
+        self,
+        buf,
+        offset: int,
+        err: OSError,
+        deadline: Optional[float],
+        cancel: Optional[threading.Event] = None,
+        recovery: bool = False,
+    ) -> int:
+        """Heal a failed extent read with bounded exponential backoff.
+
+        Entered with the first failure in hand; re-attempts the whole
+        extent until it succeeds, the fault turns non-transient, the
+        retry budget runs out, or the batch deadline passes — the
+        terminal ``IOError`` names the retry count either way.  Returns
+        the number of re-attempts used (>= 1).
+        """
+        pol = self.retry
+        r = 0
+        while True:
+            if pol is None or not _is_transient(err):
+                raise err
+            if r >= pol.max_retries:
+                raise IOError(
+                    f"{self.path}: read at offset {offset} failed after "
+                    f"{r} retries: {err}"
+                ) from err
+            if deadline is not None and time.monotonic() >= deadline:
+                raise IOError(
+                    f"{self.path}: read at offset {offset} exceeded the "
+                    f"batch deadline after {r} retries: {err}"
+                ) from err
+            delay = min(pol.backoff_s * (2.0**r), pol.backoff_cap_s)
+            if cancel is not None:
+                if cancel.wait(delay):
+                    raise CancelledRead()
+            elif delay > 0:
+                time.sleep(delay)
+            r += 1
+            self.stats.account_retries(1)
+            try:
+                _pread_full(
+                    self._fd, buf, offset, self._injector, self.file_size,
+                    cancel, recovery,
+                )
+                return r
+            except CancelledRead:
+                raise
+            except OSError as e:
+                err = e
+
+    def _verify_payload(self, view, rec: int, off: int) -> int:
+        """Check one gathered payload against the v2 table; on mismatch
+        re-read it once (a recovery read: persistent faults still apply,
+        transient ones don't) and raise :class:`CorruptRecordError` if
+        the medium is genuinely wrong.  Returns 1 if the first check
+        failed (healed or not), 0 otherwise."""
+        expected = int(self.checksums[rec])
+        if (checksum32(view) & 0xFFFFFFFF) == expected:
+            return 0
+        self.stats.account_checksum_failures(1)
+        try:
+            _pread_full(
+                self._fd, view, off, self._injector, self.file_size,
+                None, True,
+            )
+        except OSError as err:
+            self._retry_extent(
+                view, off, err, self._batch_deadline(), recovery=True
+            )
+        actual = checksum32(view) & 0xFFFFFFFF
+        if actual != expected:
+            raise CorruptRecordError(self.path, rec, off, expected, actual)
+        return 1
+
+    def _rows_to_verify(self, b, ext_id, order, retried, hedged):
+        """Batch rows needing checksum verification under the current
+        mode, or ``None`` when nothing does.  ``"auto"`` flags rows whose
+        extent was retried or sat in a hedged chunk (a cancelled loser
+        may have written after the winner's bytes were declared good)."""
+        if self.verify == "off" or self.checksums is None:
+            return None
+        if self.verify == "full":
+            return range(b)
+        flag = retried > 0
+        if hedged:
+            flag[np.asarray(hedged, dtype=np.int64)] = True
+        if not flag.any():
+            return None
+        return order[flag[ext_id]]
+
+    def _verify_dense(self, idx, out, rows) -> int:
+        bad = 0
+        offs = self._offsets
+        for i in rows:
+            i = int(i)
+            rec = int(idx[i])
+            bad += self._verify_payload(out[i], rec, int(offs[rec]))
+        return bad
+
+    def _verify_ragged(self, idx, arena, out_off, out_len, rows) -> int:
+        bad = 0
+        offs = self._offsets
+        skip = 4 if self.variable else 0
+        for i in rows:
+            i = int(i)
+            rec = int(idx[i])
+            o = int(out_off[i])
+            view = arena[o : o + int(out_len[i])]
+            bad += self._verify_payload(view, rec, int(offs[rec]) + skip)
+        return bad
+
     # -------------------------------------------------------------- read
     def read(self, idx: int) -> bytes:
         off = int(self.offsets()[idx])
@@ -433,7 +724,16 @@ class RecordStore:
         if self.variable:
             off += 4  # skip the u32 length prefix
         self.stats.account(off, ln)
-        return os.pread(self._fd, ln, off)
+        buf = bytearray(ln)
+        try:
+            _pread_full(self._fd, buf, off, self._injector, self.file_size)
+        except CancelledRead:
+            raise
+        except OSError as err:
+            self._retry_extent(buf, off, err, self._batch_deadline())
+        if self.verify == "full":
+            self._verify_payload(buf, int(idx), off)
+        return bytes(buf)
 
     def read_batch(self, indices: Sequence[int]) -> List[bytes]:
         """Naive per-record loop (the seed baseline; one syscall + one heap
@@ -467,13 +767,24 @@ class RecordStore:
                 self._scratch_pool.append(buf)
 
     def _workers_map(self, fn, extents: List[ReadExtent], workers: int):
-        """Run ``fn(chunk)`` over contiguous extent chunks on the pool."""
+        """Run ``fn(chunk, cancel)`` over contiguous extent chunks on the
+        pool.  When the retry policy arms hedging (``hedge_s``), a chunk
+        that hasn't completed within the threshold is submitted a second
+        time and the first finisher wins; the loser is cancelled
+        cooperatively (its injected stalls and backoff waits watch the
+        ``cancel`` event) and ALWAYS quiesced before this returns, so the
+        caller may reuse the destination buffers immediately.  Returns
+        the extent ids that were part of a hedged chunk (``"auto"``
+        verification re-checks those rows).
+        """
         if workers <= 1 or len(extents) <= 1:
-            fn(extents)
-            return
+            fn(extents, None)
+            return []
         workers = min(workers, len(extents))
         step = (len(extents) + workers - 1) // workers
         chunks = [extents[i : i + step] for i in range(0, len(extents), step)]
+        pol = self.retry
+        hedge_s = pol.hedge_s if pol is not None else None
         # submit under the lock so a concurrent grow can't shut the pool
         # down between our size check and our submits; result-waiting
         # happens outside (workers never take this lock)
@@ -485,9 +796,45 @@ class RecordStore:
                     max_workers=workers, thread_name_prefix="rrec-io"
                 )
                 self._pool_size = workers
-            futures = [self._pool.submit(fn, c) for c in chunks]
-        for f in futures:
-            f.result()  # re-raise worker exceptions
+            cancels = [
+                threading.Event() if hedge_s is not None else None
+                for _ in chunks
+            ]
+            futures = [
+                self._pool.submit(fn, c, cv) for c, cv in zip(chunks, cancels)
+            ]
+        if hedge_s is None:
+            for f in futures:
+                f.result()  # re-raise worker exceptions
+            return []
+        hedged: List[int] = []
+        for i, f in enumerate(futures):
+            done, _ = _futures_wait([f], timeout=hedge_s)
+            if done:
+                f.result()
+                continue
+            # straggler: duplicate the chunk; first finisher wins
+            hcancel = threading.Event()
+            with self._pool_lock:
+                h = self._pool.submit(fn, list(chunks[i]), hcancel)
+            self.stats.account_hedges(1)
+            hedged.extend(chunks[i])
+            _futures_wait({f, h}, return_when=FIRST_COMPLETED)
+            first, other = (f, h) if f.done() else (h, f)
+            ferr = first.exception()
+            if ferr is None or isinstance(ferr, CancelledRead):
+                # winner delivered (or was itself cancelled — impossible
+                # for the first finisher, kept for safety): stop the loser
+                (cancels[i] if first is h else hcancel).set()
+            oerr = other.exception()  # quiesce: blocks until it exits
+            real = [
+                e
+                for e in (ferr, oerr)
+                if e is not None and not isinstance(e, CancelledRead)
+            ]
+            if ferr is not None and oerr is not None:
+                raise real[0] if real else ferr
+        return hedged
 
     def read_batch_into(
         self,
@@ -563,8 +910,12 @@ class RecordStore:
         arena = np.empty((int(bases[-1]), rs), dtype=np.uint8)
         flat = arena.reshape(-1)
         fd = self._fd
+        inj = self._injector
+        fsz = self.file_size
+        deadline = self._batch_deadline()
+        retried = np.zeros(len(starts), np.int32)
 
-        def work(chunk: List[int]):
+        def work(chunk: List[int], cancel=None):
             for e in chunk:
                 ln = int(ext_len[e])
                 if single_ext[e]:
@@ -572,15 +923,27 @@ class RecordStore:
                 else:
                     lo = int(bases[e]) * rs
                     dst = flat[lo : lo + ln]
-                _pread_full(fd, dst, int(ext_off[e]))
+                off = int(ext_off[e])
+                try:
+                    _pread_full(fd, dst, off, inj, fsz, cancel)
+                except CancelledRead:
+                    raise
+                except OSError as err:
+                    retried[e] += self._retry_extent(
+                        dst, off, err, deadline, cancel
+                    )
 
-        self._workers_map(work, list(range(len(starts))), workers)
+        hedged = self._workers_map(work, list(range(len(starts))), workers)
         # account only after every extent read succeeded: a batch that died
         # on a short pread and is retried by the caller must not charge the
         # same extents twice (records_per_io would drift otherwise)
         self.stats.account_batch(ext_off, ext_len, ext_recs)
         if pos_multi.any():
             out[order[pos_multi]] = arena[slots[pos_multi]]
+        rows = self._rows_to_verify(b, ext_id, order, retried, hedged)
+        bad = self._verify_dense(idx, out, rows) if rows is not None else 0
+        if bad or hedged or retried.any():
+            self.stats.account_degraded(1)
         return out
 
     def read_batch_coalesced(
@@ -677,7 +1040,7 @@ class RecordStore:
             return RaggedBatch(arena, out_off, out_len)
         try:
             return self._fill_ragged(
-                arena, out_off, out_len, offs, lens, int(lens.sum()),
+                idx, arena, out_off, out_len, offs, lens, int(lens.sum()),
                 gap_bytes, workers,
             )
         except BaseException:
@@ -689,7 +1052,8 @@ class RecordStore:
             raise
 
     def _fill_ragged(
-        self, arena, out_off, out_len, offs, lens, total, gap_bytes, workers
+        self, idx, arena, out_off, out_len, offs, lens, total, gap_bytes,
+        workers,
     ) -> RaggedBatch:
         # arena/out_off/out_len arrive packed by :func:`alloc_ragged`
         b = len(lens)
@@ -707,15 +1071,26 @@ class RecordStore:
         try:
             scratch = scratch_buf[: -(-scratch_bytes // 4) * 4]
             fd = self._fd
+            inj = self._injector
+            fsz = self.file_size
+            deadline = self._batch_deadline()
+            retried = np.zeros(len(starts), np.int32)
 
-            def work(chunk: List[int]):
+            def work(chunk: List[int], cancel=None):
                 for e in chunk:
                     lo = int(bases[e])
-                    _pread_full(
-                        fd, scratch[lo : lo + int(ext_len[e])], int(ext_off[e])
-                    )
+                    dst = scratch[lo : lo + int(ext_len[e])]
+                    off = int(ext_off[e])
+                    try:
+                        _pread_full(fd, dst, off, inj, fsz, cancel)
+                    except CancelledRead:
+                        raise
+                    except OSError as err:
+                        retried[e] += self._retry_extent(
+                            dst, off, err, deadline, cancel
+                        )
 
-            self._workers_map(work, list(range(len(starts))), workers)
+            hedged = self._workers_map(work, list(range(len(starts))), workers)
             # post-execution accounting: see read_batch_into
             self.stats.account_batch(ext_off, ext_len, ext_recs)
 
@@ -749,6 +1124,14 @@ class RecordStore:
                 flat = np.repeat(delta.astype(it), out_len)
                 flat += np.arange(total, dtype=it)
                 np.take(scratch, flat, out=arena)
+            rows = self._rows_to_verify(b, ext_id, order, retried, hedged)
+            bad = (
+                self._verify_ragged(idx, arena, out_off, out_len, rows)
+                if rows is not None
+                else 0
+            )
+            if bad or hedged or retried.any():
+                self.stats.account_degraded(1)
             return RaggedBatch(arena, out_off, out_len)
         finally:
             self._release_scratch(scratch_buf)
@@ -772,10 +1155,14 @@ class RecordStore:
         return out
 
     def scan_sequential(self, chunk_bytes: int = 1 << 20):
-        """Yield (offset, raw_chunk) sequentially over the payload."""
+        """Yield (offset, raw_chunk) sequentially over the payload.
+
+        Bounded by ``payload_end``, not the file size: a v2 store's
+        checksum table must never be parsed as record bytes (the location
+        generator walks this scan to index variable-length data)."""
         pos = HEADER_SIZE
-        while pos < self.file_size:
-            n = min(chunk_bytes, self.file_size - pos)
+        while pos < self.payload_end:
+            n = min(chunk_bytes, self.payload_end - pos)
             self.stats.account(pos, n)
             yield pos, os.pread(self._fd, n, pos)
             pos += n
@@ -931,8 +1318,13 @@ class RaggedBufferRing:
                     return
 
 
-def write_records(path: str, records: Iterable[bytes], record_size: Optional[int] = None) -> int:
-    with RecordWriter(path, record_size) as w:
+def write_records(
+    path: str,
+    records: Iterable[bytes],
+    record_size: Optional[int] = None,
+    checksums: bool = True,
+) -> int:
+    with RecordWriter(path, record_size, checksums=checksums) as w:
         for r in records:
             w.append(r)
         return w.count

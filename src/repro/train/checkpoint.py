@@ -33,6 +33,17 @@ def _flatten(state) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _digest(flat: Dict[str, np.ndarray]) -> str:
+    """Content digest over the flat state: every leaf name + the first
+    4 KiB of its bytes.  ONE definition shared by save and restore, so
+    the two can never drift apart."""
+    digest = hashlib.sha256()
+    for k in sorted(flat):
+        digest.update(k.encode())
+        digest.update(np.ascontiguousarray(flat[k]).tobytes()[:4096])
+    return digest.hexdigest()
+
+
 def _unflatten_like(template, flat: Dict[str, np.ndarray]):
     def pick(path, leaf):
         key = path_str(path)
@@ -86,15 +97,11 @@ class CheckpointManager:
         tmp.mkdir(parents=True)
         try:
             np.savez(tmp / "arrays.npz", **flat)
-            digest = hashlib.sha256()
-            for k in sorted(flat):
-                digest.update(k.encode())
-                digest.update(np.ascontiguousarray(flat[k]).tobytes()[:4096])
             manifest = {
                 "step": step,
                 "extra": extra,
                 "num_leaves": len(flat),
-                "digest": digest.hexdigest(),
+                "digest": _digest(flat),
                 "time": time.time(),
             }
             (tmp / "manifest.json").write_text(json.dumps(manifest))
@@ -123,15 +130,45 @@ class CheckpointManager:
         steps = self._valid_checkpoints()
         return max(steps) if steps else None
 
-    def restore(self, template, step: Optional[int] = None) -> Tuple[Any, Dict, int]:
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+    def _load_verified(self, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Load + integrity-check one step: leaf count AND the manifest's
+        content digest must match what is on disk (a torn/bit-rotted
+        arrays.npz with an intact manifest is still corrupt)."""
         d = self.dir / f"step_{step:010d}"
         manifest = json.loads((d / "manifest.json").read_text())
         with np.load(d / "arrays.npz") as z:
             flat = {k: z[k] for k in z.files}
         if len(flat) != manifest["num_leaves"]:
-            raise ValueError("checkpoint corrupt: leaf count mismatch")
-        state = _unflatten_like(template, flat)
-        return state, manifest["extra"], step
+            raise ValueError(f"checkpoint {d} corrupt: leaf count mismatch")
+        want = manifest.get("digest")
+        if want is not None and _digest(flat) != want:
+            raise ValueError(f"checkpoint {d} corrupt: content digest mismatch")
+        return flat, manifest
+
+    def restore(self, template, step: Optional[int] = None) -> Tuple[Any, Dict, int]:
+        """Restore the newest verifiable checkpoint (or exactly ``step``).
+
+        With ``step=None`` a torn or digest-mismatched checkpoint is
+        *skipped* in favor of the previous valid step — a crash mid-write
+        or bit rot on the newest checkpoint must not strand an otherwise
+        restorable run.  An explicitly requested ``step`` raises instead
+        (the caller asked for those exact bytes)."""
+        if step is not None:
+            if not (self.dir / f"step_{step:010d}" / "manifest.json").exists():
+                raise FileNotFoundError(f"no checkpoint for step {step} in {self.dir}")
+            flat, manifest = self._load_verified(step)
+            return _unflatten_like(template, flat), manifest["extra"], step
+        skipped = []
+        for cand in sorted(self._valid_checkpoints(), reverse=True):
+            try:
+                flat, manifest = self._load_verified(cand)
+            except (ValueError, OSError, KeyError, json.JSONDecodeError) as e:
+                skipped.append((cand, str(e)))
+                continue
+            return _unflatten_like(template, flat), manifest["extra"], cand
+        if skipped:
+            raise FileNotFoundError(
+                f"no valid checkpoint in {self.dir}; skipped corrupt steps "
+                f"{[s for s, _ in skipped]}"
+            )
+        raise FileNotFoundError(f"no checkpoint in {self.dir}")

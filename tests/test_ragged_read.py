@@ -279,7 +279,7 @@ def test_failed_batch_returns_ring_slot(tmp_path, monkeypatch):
     ring = RaggedBufferRing(capacity_bytes=24 * 32, batch_size=32, depth=2)
     idx = np.arange(32)
 
-    def boom(fd, buf, offset):
+    def boom(fd, buf, offset, *a, **k):
         raise IOError("short read at 0: EOF")
 
     monkeypatch.setattr(record_store, "_pread_full", boom)
@@ -316,11 +316,11 @@ def test_retried_batch_after_short_pread_accounts_once(
     real = record_store._pread_full
     state = {"fail": 1}
 
-    def flaky(fd, buf, offset):
+    def flaky(fd, buf, offset, *a, **k):
         if state["fail"]:
             state["fail"] -= 1
             raise IOError(f"short read at {offset}: EOF")
-        return real(fd, buf, offset)
+        return real(fd, buf, offset, *a, **k)
 
     monkeypatch.setattr(record_store, "_pread_full", flaky)
     call = {
