@@ -138,11 +138,41 @@ def _fault_overhead_metrics(res: dict) -> Metrics:
     }
 
 
+def _multihost_read_metrics(res: dict) -> Metrics:
+    h = res["headline"]
+    m: Metrics = {
+        # correctness canaries: any non-zero is a broken tier, not noise
+        "headline/byte_mismatches": ("zero", h["byte_mismatches"]),
+        "headline/peer_failures": ("zero", h["peer_failures_total"]),
+        "headline/accounting_imbalances": (
+            "zero",
+            h["accounting_imbalances"],
+        ),
+        # the aggregate-bytes invariant: belady within the epoch-edge
+        # bound of the pigeonhole floor at every host count (the bound
+        # itself — 5% of n — absorbs thread-timing jitter, so per-point
+        # excess bytes are deliberately NOT gated)
+        "headline/invariant_violations": (
+            "zero",
+            0 if h["aggregate_invariant_ok"] else 1,
+        ),
+    }
+    for key, p in res["points"].items():
+        m[f"records_per_s/{key}"] = ("throughput", p["records_per_s"])
+        m[f"hit_rate/{key}"] = ("hit_rate", p["hit_frac"])
+        m[f"storage_record_bytes/{key}"] = (
+            "bytes",
+            p["aggregate_record_bytes_per_epoch"],
+        )
+    return m
+
+
 EXTRACTORS: Dict[str, Callable[[dict], Metrics]] = {
     "prefetch": _prefetch_metrics,
     "ragged_read": _ragged_read_metrics,
     "batch_read": _batch_read_metrics,
     "fault_overhead": _fault_overhead_metrics,
+    "multihost_read": _multihost_read_metrics,
 }
 
 

@@ -21,6 +21,7 @@ def main() -> None:
         dnn_convergence,
         fault_overhead,
         memory_overhead,
+        multihost_read,
         page_aware,
         pipeline_throughput,
         prefetch,
@@ -42,6 +43,7 @@ def main() -> None:
         "batch_read": batch_read,               # coalesced multi-queue engine
         "ragged_read": ragged_read,             # ragged arena engine (sparse)
         "prefetch": prefetch,                   # clairvoyant prefetch + DRAM tier
+        "multihost_read": multihost_read,       # distributed tier aggregate-read invariant
         "fault_overhead": fault_overhead,       # resilience scaffold cost gate
         "roofline": roofline,                   # §Roofline (from dry-run)
     }

@@ -312,6 +312,8 @@ def store_fetch_fn(
     max_epochs: Optional[int] = None,
     eviction_policy: str = "lru",
     prefetch_planner: Optional[bool] = None,
+    remote: Any = None,
+    placement: Any = None,
 ) -> Callable[[np.ndarray], Any]:
     """Build an :class:`InputPipeline` ``fetch_fn`` over a record store.
 
@@ -340,6 +342,15 @@ def store_fetch_fn(
     ``batch_iter`` as the pipeline's ``batch_iter_fn`` so the lookahead
     window re-syncs at epoch boundaries.
 
+    ``remote`` / ``placement`` extend the tiered path across hosts
+    (``repro.prefetch.distributed``): ``placement`` is the shared
+    :class:`~repro.sharding.placement.ClairvoyantPlacement` annotating
+    plans with each record's predicted holder, ``remote`` the host's
+    :class:`~repro.prefetch.distributed.RemoteTier` serving routed
+    misses peer-to-peer before any storage read.  Most callers should
+    build the whole data plane with
+    :func:`repro.prefetch.distributed.make_cluster` instead.
+
     Pair with ``InputPipeline(recycle_fn=ring.recycle)`` for the
     allocation-free steady state; both ring classes ignore foreign arrays,
     so the blanket recycle is safe even for miss-allocated batches.
@@ -362,6 +373,8 @@ def store_fetch_fn(
             max_epochs=max_epochs,
             policy=eviction_policy,
             planner=prefetch_planner,
+            remote=remote,
+            placement=placement,
         )
     if mode == "auto":
         mode = "ragged" if store.variable else "dense"

@@ -3,11 +3,48 @@
 ``pltpu.CompilerParams`` was called ``TPUCompilerParams`` in older JAX
 releases (e.g. 0.4.x); resolve whichever name this installation provides
 so the kernels run unmodified across versions.
+
+``cost_analysis_dict`` papers over the other cross-version wart this
+repo hits: ``Compiled.cost_analysis()`` returns a single flat dict on
+newer JAX but a *list* of per-executable dicts on 0.4.x (one entry per
+program under the hood, usually length 1) — so ``cost.get("flops")``
+crashes with ``AttributeError: 'list' object has no attribute 'get'`` on
+exactly the CPU toolchain CI pins.  The shim normalizes both shapes to
+one summed dict.
 """
 from __future__ import annotations
+
+from typing import Mapping, Optional
 
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams"
 )
+
+
+def cost_analysis_dict(compiled) -> Optional[dict]:
+    """``compiled.cost_analysis()`` as one flat ``{metric: value}`` dict,
+    across JAX versions.
+
+    Newer JAX returns the dict directly; 0.4.x returns a list of
+    per-program dicts (numeric metrics are summed across entries —
+    correct for flops/bytes-style counters, which is all callers read);
+    some backends return ``None``.  Non-numeric values survive only from
+    the first entry that carries them.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None or isinstance(cost, Mapping):
+        return dict(cost) if cost is not None else None
+    out: dict = {}
+    for entry in cost:
+        if not isinstance(entry, Mapping):
+            continue
+        for k, v in entry.items():
+            if isinstance(v, (int, float)) and isinstance(
+                out.get(k, 0.0), (int, float)
+            ):
+                out[k] = out.get(k, 0) + v
+            else:
+                out.setdefault(k, v)
+    return out

@@ -44,7 +44,17 @@ def build_argparser():
     ap.add_argument("--io-producers", type=int, default=1,
                     help="pipeline producer threads (ordered reassembly)")
     ap.add_argument("--cache-mb", type=float, default=0.0,
-                    help="DRAM tier budget in MiB (0 = no tiered read path)")
+                    help="DRAM tier budget in MiB (0 = no tiered read path); "
+                         "with --hosts > 1 this is the FLEET budget, split "
+                         "evenly across hosts")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="run the data plane as an N-host clairvoyant "
+                         "cluster (repro.prefetch.distributed): each host "
+                         "owns a slice of every global batch, caches what "
+                         "it consumes, and serves peers host-to-host "
+                         "before storage.  Batches stay byte-identical to "
+                         "--hosts 1; compute is unchanged (single device). "
+                         "Needs --cache-mb > 0")
     ap.add_argument("--prefetch-lookahead", type=int, default=8,
                     help="batches the clairvoyant prefetcher plans ahead")
     ap.add_argument("--eviction-policy", default="belady",
@@ -102,8 +112,43 @@ def main(argv=None):
     )
 
     fetcher = None
+    cluster = None
     batch_iter_fn = None
-    if args.cache_mb > 0:
+    if args.cache_mb > 0 and args.hosts > 1:
+        # distributed clairvoyant data plane: H in-process hosts, each
+        # with its own store handle, shard view, and cache; misses route
+        # to the predicted holding peer before storage.  Compute stays on
+        # this device — only the I/O plane is multi-host.
+        from repro.prefetch.distributed import ClusterFetcher, make_cluster
+
+        cluster = make_cluster(
+            lambda: RecordStore(
+                path, fault_injector=injector, verify=args.verify_checksums
+            ),
+            shuffler,
+            args.hosts,
+            budget_bytes=int(args.cache_mb * 2**20),
+            lookahead=args.prefetch_lookahead,
+            workers=args.io_workers,
+            background=True,
+            max_epochs=args.epochs,
+            policy=args.eviction_policy,
+            planner=(
+                None
+                if args.prefetch_planner == "auto"
+                else args.prefetch_planner == "on"
+            ),
+        )
+        fetcher = ClusterFetcher(cluster)
+        batch_iter_fn = fetcher.batch_iter
+
+        if store.variable:
+            def fetch(idx):
+                return decode_token_batch(fetcher(idx).tolist(), seq)
+        else:
+            def fetch(idx):
+                return decode_token_batch(fetcher(idx), seq)
+    elif args.cache_mb > 0:
         # tiered read path: DRAM cache + clairvoyant prefetch along the
         # shuffler's known index stream (batch bytes unchanged).
         # max_epochs stops the lookahead from prefetching past the last
@@ -159,7 +204,19 @@ def main(argv=None):
     if args.resume and trainer.try_resume():
         print(f"resumed at step {trainer.global_step}")
     summary = trainer.train()
-    if fetcher is not None:
+    if cluster is not None:
+        agg = cluster.aggregate_io()
+        fetcher.close()
+        summary["distributed"] = {
+            "hosts": cluster.num_hosts,
+            "policy": args.eviction_policy,
+            "fleet_capacity_records": cluster.placement.aggregate_capacity(),
+            "expected_steady_storage_records_per_epoch": (
+                cluster.placement.expected_storage_reads()
+            ),
+            **agg,
+        }
+    elif fetcher is not None:
         fetcher.close()
         summary["cache"] = {
             "policy": fetcher.cache.policy,

@@ -147,6 +147,12 @@ class TieredCache:
         # fully-missed batches
         self.scratch_copies = 0
         self.scratch_copy_bytes = 0
+        # cross-host tier supply side: records/bytes exported to peers by
+        # export_records(), and how many of those were released (moved,
+        # not copied — consumer-caches placement)
+        self.remote_served = 0
+        self.remote_served_bytes = 0
+        self.remote_released = 0
 
     # ---------------------------------------------------------- introspect
     @property
@@ -438,6 +444,60 @@ class TieredCache:
             n = len(drop_ids)
             self.invalidations += n
             return n
+
+    # ------------------------------------------------------------- export
+    def export_records(self, ids: np.ndarray, release: bool = True):
+        """Serve ``ids`` to a *peer host* (the cross-host tier's supply
+        side): copy every resident requested id into a fresh arena and —
+        with ``release=True`` — free its slot, *move* semantics.  Under
+        consumer-caches placement the requester is the record's next
+        consumer and becomes its new holder, so keeping a second copy
+        here would double-count fleet capacity for a record this host
+        will not use again before the requester does.
+
+        Pinned residents are copied but **not** released: a pin means
+        this host's own lookahead window still needs the bytes (an epoch
+        boundary can put a record in both hosts' windows briefly), and
+        dropping it would turn a planned local hit into a storage read.
+
+        Returns ``(found, payload, offsets, lengths)`` where ``found``
+        masks ``ids`` (aligned), and ``payload[offsets[i]:offsets[i]+
+        lengths[i]]`` is the i-th *found* record.  The copy happens under
+        the cache lock (no slot recycling mid-copy); export does not
+        touch the hit/miss counters — peer traffic is accounted in
+        ``remote_served`` / ``remote_served_bytes``.
+        """
+        ids = np.asarray(ids, np.int64)
+        with self._lock:
+            slots = self._slot_of[ids]
+            found = slots >= 0
+            fids = ids[found]
+            lens = self.record_lengths[fids]
+            offsets = np.concatenate(([0], np.cumsum(lens))).astype(np.int64)
+            payload = np.empty(int(offsets[-1]), np.uint8)
+            if len(fids):
+                copy_records(
+                    self._arena,
+                    slots[found] * self.slot_bytes,
+                    payload,
+                    offsets[:-1],
+                    lens,
+                )
+                self.remote_served += len(fids)
+                self.remote_served_bytes += int(lens.sum())
+                if release:
+                    rel = self._pin[fids] == 0
+                    rel_ids = fids[rel]
+                    rel_slots = slots[found][rel]
+                    if len(rel_ids):
+                        self._slot_of[rel_ids] = -1
+                        self._id_of[rel_slots] = -1
+                        self._free.extend(int(s) for s in rel_slots)
+                        self._used_bytes -= int(
+                            self.record_lengths[rel_ids].sum()
+                        )
+                        self.remote_released += len(rel_ids)
+            return found, payload, offsets[:-1], lens
 
     def clear(self):
         with self._lock:

@@ -84,6 +84,8 @@ class PrefetchingFetcher:
         cache: Optional[TieredCache] = None,
         policy: str = "lru",
         planner: Optional[bool] = None,
+        remote=None,
+        placement=None,
     ):
         if mode == "auto":
             mode = "ragged" if store.variable else "dense"
@@ -103,6 +105,12 @@ class PrefetchingFetcher:
             if cache is not None
             else TieredCache(store.lengths(), budget_bytes, policy=policy)
         )
+        # cross-host tier (repro.prefetch.distributed.RemoteTier): when
+        # set, cache misses whose predicted holder is a peer host are
+        # fetched host-to-host before any storage read — prefetch-side in
+        # _execute (overlapped with compute), demand-side in the serve
+        # paths (the fallback when prefetch lagged)
+        self.remote = remote
         self.scheduler = LookaheadScheduler(
             shuffler,
             self.cache,
@@ -110,6 +118,7 @@ class PrefetchingFetcher:
             start_epoch=start_epoch,
             max_epochs=max_epochs,
             planner=planner,
+            placement=placement,
         )
         self.planner = self.scheduler.planner
         self._sched_lock = threading.Lock()
@@ -124,6 +133,10 @@ class PrefetchingFetcher:
         self._closed = False
         self.prefetch_batches = 0   # plans executed with a storage read
         self.prefetch_records = 0   # records brought in by prefetch reads
+        # records a plan sourced from a peer host instead of storage, and
+        # demand-time misses the cross-host tier served
+        self.prefetch_remote_records = 0
+        self.demand_remote_records = 0
         # records the pre-read admission probe trimmed from in-flight
         # plans (state drifted since plan time); their final — and only
         # counted — admission decision happens at the demand insert
@@ -259,6 +272,33 @@ class PrefetchingFetcher:
                 need = need[ok]
                 if use_pos is not None:
                     use_pos = use_pos[ok]
+        if need.size and self.remote is not None:
+            # cross-host tier: records whose predicted holder is a peer
+            # are pulled host-to-host here, at plan time, so the network
+            # round-trip overlaps compute exactly like the storage
+            # prefetch does.  Served records are inserted (consumer now
+            # caches them — the placement rule's handoff) and drop out of
+            # the storage read below; a peer miss stays in ``need`` and
+            # falls back to one storage read.
+            got = np.zeros(len(need), bool)
+            for sel, payload, offs, lens in self.remote.fetch_groups(
+                need, plan.epoch
+            ):
+                self.cache.insert(
+                    need[sel],
+                    payload,
+                    offs,
+                    next_use=use_pos[sel] if use_pos is not None else None,
+                    filtered=self.planner,
+                )
+                self.store.stats.account_remote_hits(len(sel), int(lens.sum()))
+                got[sel] = True
+            nr = int(got.sum())
+            if nr:
+                self.prefetch_remote_records += nr
+                need = need[~got]
+                if use_pos is not None:
+                    use_pos = use_pos[~got]
         if need.size == 0:
             return
         rb = self.store.read_batch_ragged(
@@ -291,6 +331,13 @@ class PrefetchingFetcher:
                 if self.planner
                 else None
             )
+            # the batch's epoch, for routing demand misses to their
+            # predicted peer (placement tables are per-epoch coordinates)
+            epoch = (
+                self.scheduler.epoch_of(key)
+                if self.remote is not None
+                else None
+            )
         if ev is not None:
             # this batch's prefetch is queued or running: wait for it
             # rather than issuing a duplicate storage read (timeout =
@@ -299,9 +346,9 @@ class PrefetchingFetcher:
                 self.plan_waits_timed_out += 1
                 self.store.stats.account_degraded(1)
         out = (
-            self._serve_dense(idx, nu)
+            self._serve_dense(idx, nu, epoch)
             if self.mode == "dense"
-            else self._serve_ragged(idx, nu)
+            else self._serve_ragged(idx, nu, epoch)
         )
         # serve first, then slide: the served batch's pins drop only
         # after its bytes are safely materialized.  Retirement is by
@@ -312,7 +359,37 @@ class PrefetchingFetcher:
             self._dispatch(self.scheduler.advance(idx))
         return out
 
-    def _serve_dense(self, indices, nu=None) -> np.ndarray:
+    def _remote_into(self, idx, miss, dst, dst_off, nu, epoch):
+        """Demand-side cross-host serve: fetch the missed records'
+        predicted peers, copy served payloads straight into the output
+        buffer rows, and insert them into the local cache (the consumer
+        caches what it just pulled — placement handoff).  Returns the
+        served mask over ``idx``; residual misses take the storage
+        path."""
+        served = np.zeros(len(idx), bool)
+        if self.remote is None or epoch is None:
+            return served
+        mi = np.flatnonzero(miss)
+        if len(mi) == 0:
+            return served
+        for sel, payload, offs, lens in self.remote.fetch_groups(
+            idx[mi], epoch
+        ):
+            rows = mi[sel]
+            copy_records(payload, offs, dst, dst_off[rows], lens)
+            self.cache.insert(
+                idx[rows],
+                payload,
+                offs,
+                next_use=nu[rows] if nu is not None else None,
+                filtered=self.planner,
+            )
+            self.store.stats.account_remote_hits(len(rows), int(lens.sum()))
+            served[rows] = True
+        self.demand_remote_records += int(served.sum())
+        return served
+
+    def _serve_dense(self, indices, nu=None, epoch=None) -> np.ndarray:
         idx = np.asarray(indices, np.int64)
         b = len(idx)
         rs = int(self.store.record_size)
@@ -327,8 +404,12 @@ class PrefetchingFetcher:
             dst_off = np.arange(b, dtype=np.int64) * rs
             hit = self.cache.gather(idx, out.reshape(-1), dst_off)
             nh = int(hit.sum())
+            if self.remote is not None and not hit.all():
+                hit |= self._remote_into(
+                    idx, ~hit, out.reshape(-1), dst_off, nu, epoch
+                )
             miss = ~hit
-            if nh == 0:
+            if nh == 0 and not hit.any():
                 # zero-copy handoff, miss side: nothing resident (cold
                 # epoch / 0-budget tier) — read storage straight into the
                 # destination (ring) buffer, no tmp batch + row copy
@@ -365,7 +446,7 @@ class PrefetchingFetcher:
                 self.ring.recycle(out)  # failed fetch must not drain the ring
             raise
 
-    def _serve_ragged(self, indices, nu=None) -> RaggedBatch:
+    def _serve_ragged(self, indices, nu=None, epoch=None) -> RaggedBatch:
         idx = np.asarray(indices, np.int64)
         b = len(idx)
         lens = self.store.lengths()[idx] if b else np.empty(0, np.int64)
@@ -375,9 +456,13 @@ class PrefetchingFetcher:
         try:
             dst_off = out_off.astype(np.int64)
             hit = self.cache.gather(idx, arena, dst_off)
+            dram_hit = hit
             nh = int(hit.sum())
+            if self.remote is not None and not hit.all():
+                dram_hit = hit.copy()
+                hit |= self._remote_into(idx, ~hit, arena, dst_off, nu, epoch)
             miss = ~hit
-            if nh == 0:
+            if nh == 0 and not hit.any():
                 # zero-copy handoff (see _serve_dense): the extent gather
                 # materializes directly into the ring arena
                 self.store.read_batch_ragged(
@@ -406,7 +491,7 @@ class PrefetchingFetcher:
                 )
             if nh:
                 self.store.stats.account_cache_hits(
-                    nh, int(lens[hit].sum())
+                    nh, int(lens[dram_hit].sum())
                 )
             return RaggedBatch(arena, out_off, out_len)
         except BaseException:

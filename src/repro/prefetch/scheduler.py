@@ -72,6 +72,11 @@ class PrefetchPlan:
     # itself is protected by the pin).  None when the planner is off or
     # the shuffler exposes no index stream.
     use_pos: Optional[np.ndarray] = None
+    # clairvoyant routing for each fetch record (multi-host tier): the
+    # host predicted to hold it (its previous-epoch consumer that won the
+    # retention rank — ``ClairvoyantPlacement.peer_for``), ``NO_HOST``
+    # (-1) = read storage.  None when no placement is attached.
+    peer: Optional[np.ndarray] = None
 
 
 class LookaheadScheduler:
@@ -93,9 +98,16 @@ class LookaheadScheduler:
         max_epochs: Optional[int] = None,
         record_lengths: Optional[np.ndarray] = None,
         planner: Optional[bool] = None,
+        placement=None,
     ):
         self.shuffler = shuffler
         self.cache = cache
+        # ClairvoyantPlacement (repro.sharding.placement) or None: when
+        # set, every plan's fetch records are annotated with their
+        # predicted holding peer, so the executor asks a host instead of
+        # storage — exact next-use positions driving *routing*, the same
+        # closed form that drives eviction
+        self.placement = placement
         self.lookahead = max(1, int(lookahead))
         self.max_epochs = max_epochs
         if record_lengths is not None:
@@ -276,8 +288,11 @@ class LookaheadScheduler:
         nbytes = (
             int(self._lengths[fetch].sum()) if self._lengths is not None else 0
         )
+        peer = None
+        if self.placement is not None and len(fetch):
+            peer = self.placement.peer_for(fetch, epoch)
         self._window.append((epoch, seq, uniq, batch_key(batch), occ))
-        return PrefetchPlan(epoch, seq, batch, fetch, nbytes, use_pos)
+        return PrefetchPlan(epoch, seq, batch, fetch, nbytes, use_pos, peer)
 
     def _top_up(self) -> List[PrefetchPlan]:
         """Admit batches until the window holds ``lookahead`` of them, the
@@ -380,6 +395,18 @@ class LookaheadScheduler:
         if tbl is None:
             return np.full(len(ids), NEVER, np.int64)
         return (epoch + 1) * self.shuffler.num_items + tbl[ids]
+
+    def epoch_of(self, key: Optional[Tuple[int, ...]]) -> Optional[int]:
+        """Epoch of the window entry matching ``key`` (falling back to the
+        head) — what the demand serve path needs to *route* a miss to its
+        predicted peer (placement tables are per-epoch coordinates)."""
+        if not self._window:
+            return None
+        if key is not None:
+            for entry in self._window:
+                if entry[3] == key:
+                    return entry[0]
+        return self._window[0][0]
 
     def fill(self) -> List[PrefetchPlan]:
         """Prime the window; returns the new plans in admission order."""

@@ -1,0 +1,236 @@
+"""Peer transports for the cross-host record tier.
+
+Two implementations of one contract — ``fetch(peer, ids)`` returns
+``(found, payload, offsets, lengths)`` exactly as
+:meth:`repro.prefetch.cache.TieredCache.export_records` does on the
+serving side:
+
+* :class:`LocalTransport` — in-process: peers are ``TieredCache``
+  objects in a shared registry, a fetch is one locked arena copy.  This
+  is the multi-host *data plane* run inside one process (threads or
+  lockstep loops): byte-exact, deterministic, no sockets — what the
+  byte-identity tests and the aggregate-read benchmark drive.
+* :class:`TCPTransport` / :class:`PeerServer` — a real socket path with
+  the same framing a multi-node deployment would use, for when hosts
+  are actual processes (``launch/mesh.py``'s CPU process mesh).  One
+  persistent connection per peer, length-prefixed binary frames,
+  vectorized numpy (de)serialization — no pickling, no per-record
+  Python.
+
+Wire format (little-endian), one frame each way per fetch:
+
+    request :  u32 n | n × i64 record ids
+    response:  u32 n | n × u8 found mask | u64 payload_bytes
+               | f × i64 lengths (f = found count) | payload bytes
+
+Offsets are reconstructed by cumsum on the client — they are redundant
+on the wire.  Failures (connect refused, short frame, peer gone) raise
+``OSError`` and are the :class:`~repro.prefetch.distributed.RemoteFetcher`'s
+problem: it retries under the PR-6 :class:`~repro.storage.faults.RetryPolicy`
+and falls back to storage, so a dead peer degrades throughput, never
+correctness.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+FetchResult = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+_REQ_HDR = struct.Struct("<I")
+_RSP_HDR = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+
+
+def _empty_result(n: int) -> FetchResult:
+    return (
+        np.zeros(n, bool),
+        np.empty(0, np.uint8),
+        np.empty(0, np.int64),
+        np.empty(0, np.int64),
+    )
+
+
+class LocalTransport:
+    """In-process peer fetches against a shared ``{host_id: TieredCache}``
+    registry.  ``register`` is called by the cluster builder as nodes come
+    up; fetching from an unknown/closed peer raises ``OSError`` like a
+    refused connection would, exercising the retry/fallback path."""
+
+    def __init__(self):
+        self._peers: Dict[int, object] = {}
+        self._lock = threading.Lock()
+        # fault hook for tests: host ids whose fetches currently fail
+        self.down: set = set()
+
+    def register(self, host_id: int, cache) -> None:
+        with self._lock:
+            self._peers[int(host_id)] = cache
+
+    def unregister(self, host_id: int) -> None:
+        with self._lock:
+            self._peers.pop(int(host_id), None)
+
+    def fetch(self, peer: int, ids: np.ndarray) -> FetchResult:
+        if peer in self.down:
+            raise OSError(f"peer {peer} unreachable (injected)")
+        with self._lock:
+            cache = self._peers.get(int(peer))
+        if cache is None:
+            raise OSError(f"peer {peer} not registered")
+        return cache.export_records(ids, release=True)
+
+    def close(self) -> None:
+        with self._lock:
+            self._peers.clear()
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        k = sock.recv_into(view[got:], n - got)
+        if k == 0:
+            raise OSError("peer closed connection mid-frame")
+        got += k
+    return bytes(buf)
+
+
+class PeerServer:
+    """Serves one host's ``TieredCache`` to peers over TCP.
+
+    One accept thread, one thread per connection (peer count is small
+    and connections are persistent).  Binds ``host:port`` (port 0 = OS
+    pick, read back from ``.address``)."""
+
+    def __init__(self, cache, host: str = "127.0.0.1", port: int = 0):
+        self.cache = cache
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen()
+        self.address = self._sock.getsockname()
+        self._closing = threading.Event()
+        self._threads = []
+        t = threading.Thread(target=self._accept_loop, daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def _accept_loop(self):
+        while not self._closing.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return
+            t = threading.Thread(target=self._serve, args=(conn,), daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _serve(self, conn: socket.socket):
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            while not self._closing.is_set():
+                hdr = conn.recv(_REQ_HDR.size, socket.MSG_WAITALL)
+                if len(hdr) < _REQ_HDR.size:
+                    return
+                (n,) = _REQ_HDR.unpack(hdr)
+                ids = np.frombuffer(_recv_exact(conn, 8 * n), "<i8")
+                found, payload, _, lens = self.cache.export_records(
+                    ids, release=True
+                )
+                frame = b"".join(
+                    (
+                        _RSP_HDR.pack(n),
+                        found.astype(np.uint8).tobytes(),
+                        _U64.pack(payload.nbytes),
+                        lens.astype("<i8").tobytes(),
+                        payload.tobytes(),
+                    )
+                )
+                conn.sendall(frame)
+        except OSError:
+            return
+        finally:
+            conn.close()
+
+    def close(self):
+        self._closing.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+class TCPTransport:
+    """Socket transport: one persistent connection per peer, lazily
+    opened, serialized per-peer by a lock (the RemoteFetcher groups a
+    batch's records by peer, so a fetch is one frame exchange).  A
+    connection error closes that peer's socket so the next attempt — the
+    retry layer's — reconnects fresh."""
+
+    def __init__(self, addresses: Dict[int, tuple], timeout_s: Optional[float] = 10.0):
+        self.addresses = {int(k): tuple(v) for k, v in addresses.items()}
+        self.timeout_s = timeout_s
+        self._conns: Dict[int, socket.socket] = {}
+        self._locks: Dict[int, threading.Lock] = {
+            h: threading.Lock() for h in self.addresses
+        }
+
+    def _conn(self, peer: int) -> socket.socket:
+        sock = self._conns.get(peer)
+        if sock is None:
+            sock = socket.create_connection(
+                self.addresses[peer], timeout=self.timeout_s
+            )
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._conns[peer] = sock
+        return sock
+
+    def fetch(self, peer: int, ids: np.ndarray) -> FetchResult:
+        peer = int(peer)
+        if peer not in self.addresses:
+            raise OSError(f"peer {peer} has no address")
+        ids = np.asarray(ids, np.int64)
+        n = len(ids)
+        if n == 0:
+            return _empty_result(0)
+        with self._locks[peer]:
+            try:
+                sock = self._conn(peer)
+                sock.sendall(_REQ_HDR.pack(n) + ids.astype("<i8").tobytes())
+                (rn,) = _RSP_HDR.unpack(_recv_exact(sock, _RSP_HDR.size))
+                if rn != n:
+                    raise OSError(f"peer {peer} answered {rn} ids for {n}")
+                found = np.frombuffer(_recv_exact(sock, n), np.uint8).astype(bool)
+                (pb,) = _U64.unpack(_recv_exact(sock, _U64.size))
+                f = int(found.sum())
+                lens = np.frombuffer(_recv_exact(sock, 8 * f), "<i8").astype(
+                    np.int64
+                )
+                payload = np.frombuffer(_recv_exact(sock, pb), np.uint8).copy()
+                if int(lens.sum()) != pb:
+                    raise OSError(f"peer {peer} framing mismatch")
+            except OSError:
+                self._drop(peer)
+                raise
+        offsets = np.concatenate(([0], np.cumsum(lens[:-1]))).astype(np.int64)
+        if f == 0:
+            offsets = np.empty(0, np.int64)
+        return found, payload, offsets, lens
+
+    def _drop(self, peer: int):
+        sock = self._conns.pop(peer, None)
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def close(self):
+        for peer in list(self._conns):
+            self._drop(peer)

@@ -150,6 +150,90 @@ def cache_hit_model(
     )
 
 
+def distributed_hit_model(
+    c_global: float,
+    hosts: int,
+    policy: str = "belady",
+    window_frac: float = 0.0,
+) -> dict:
+    """Closed-form tier split for the multi-host clairvoyant tier.
+
+    ``c_global`` is the *fleet* capacity fraction (``sum(capacity_h)/n``)
+    spread over ``hosts`` consumer-caches hosts (the
+    ``repro.sharding.placement`` rule: each record is retained, if at
+    all, by its last consumer).  Two observations give the split:
+
+    * **total hit is capacity-shaped, not host-shaped.**  Aggregate
+      retained slots are ``c_global·n`` whether they sit in one cache or
+      ``H``; under Belady the distributed pigeonhole (every resident's
+      next use is exactly one epoch away, farthest-next-use never evicts
+      a not-yet-used resident on any host) makes aggregate hits exactly
+      ``c_global·n`` per steady epoch.  Under LRU, host ``h`` sees
+      ``1/H`` of the insert stream with ``1/H`` of the capacity — reuse
+      distances and capacity scale together, so the classic closed form
+      survives unchanged:  ``hit = cache_hit_model(c_global, policy)``.
+    * **the holder is uniform over hosts.**  Epoch permutations are
+      independent, so a retained record's *next* consumer is any host
+      with probability ``1/H``: a fraction ``1/H`` of hits are local
+      (DRAM), ``(H−1)/H`` are remote (peer-served, priced by
+      :class:`NetworkModel`).
+
+    Returns ``{"local", "remote", "storage"}`` fractions of the epoch's
+    record accesses (summing to 1), validated against
+    :class:`repro.storage.page_cache.DistributedCacheSim`.
+    """
+    if hosts < 1:
+        raise ValueError("hosts must be >= 1")
+    hit = cache_hit_model(c_global, policy, window_frac)
+    return {
+        "local": hit / hosts,
+        "remote": hit * (hosts - 1) / hosts,
+        "storage": 1.0 - hit,
+    }
+
+
+@dataclass(frozen=True)
+class NetworkModel:
+    """Host-to-host link pricing for the cross-host tier.
+
+    A remote record read costs one RTT (request + response headers) plus
+    payload at link bandwidth, overlapped across ``max_inflight``
+    outstanding peer fetches — the same queue-depth shape as
+    :class:`StorageModel.t_rand_read`.  Defaults model a 25 GbE
+    data-center link; the point of the tier is that even 10 GbE beats a
+    random NVM read storm, and *always* beats HDD."""
+
+    name: str = "25GbE"
+    bandwidth_Bps: float = 25e9 / 8
+    rtt_s: float = 20e-6
+    max_inflight: float = 32.0
+
+    def t_remote_read(
+        self, n_fetches: float, nbytes: float = 0.0, inflight: float = 1.0
+    ) -> float:
+        if n_fetches <= 0:
+            return 0.0
+        q = max(1.0, min(inflight, self.max_inflight))
+        return n_fetches * self.rtt_s / q + nbytes / self.bandwidth_Bps
+
+    def t_epoch_remote(self, plan, hosts: int) -> float:
+        """Remote-tier time for one epoch of an ``IOPlan`` across
+        ``hosts``.  ``plan.cache_hit_fraction`` is the *total* tier hit
+        rate; a ``(hosts−1)/hosts`` share of those hits is peer-served
+        (holder uniform over hosts — see :func:`distributed_hit_model`)
+        and moves host-to-host instead of from storage."""
+        if hosts <= 1:
+            return 0.0
+        hit = min(1.0, max(0.0, float(getattr(plan, "cache_hit_fraction", 0.0))))
+        frac = hit * (hosts - 1) / hosts
+        n = plan.epoch_rand_read_ios * frac
+        b = plan.epoch_rand_read_bytes * frac
+        return self.t_remote_read(n, b, inflight=getattr(plan, "queue_depth", 1.0))
+
+
+DEFAULT_NETWORK = NetworkModel()
+
+
 @dataclass(frozen=True)
 class StorageModel:
     name: str

@@ -142,3 +142,108 @@ class BeladyPageCache:
 
     def reset(self):
         self.hits = self.misses = 0
+
+
+class DistributedCacheSim:
+    """Record-level simulator of the multi-host clairvoyant tier.
+
+    ``H`` hosts each own a demand-fill cache over the records they
+    consume (host = slot range of each global batch, the
+    :func:`repro.sharding.placement.host_slice_bounds` rule).  An access
+    resolves through the tier order the live system uses:
+
+    1. consumer's own cache → **local** hit;
+    2. any peer's cache → **remote** hit, and the record *moves*
+       (release-on-serve: the peer frees its slot, the consumer now
+       caches it — consumer-caches placement, no double counting);
+    3. otherwise → **storage** read by the consumer.
+
+    Retention is per-host: ``belady`` inserts then evicts the resident
+    with the farthest *global* next use (the admission-exchange
+    semantics of :class:`repro.prefetch.cache.TieredCache` — the new
+    record itself loses when it is the farthest), ``lru`` evicts least
+    recently used.  Next-use times are global positions over the whole
+    multi-epoch stream, so cross-host reuse prices correctly.
+
+    This is the ground truth the closed forms are validated against:
+    :func:`repro.storage.devices.distributed_hit_model` for the
+    local/remote/storage split, and
+    :meth:`repro.sharding.placement.ClairvoyantPlacement.expected_storage_reads`
+    for the aggregate pigeonhole floor ``n − sum(capacity_h)`` per
+    steady-state epoch.
+    """
+
+    def __init__(self, num_hosts: int, capacities: Sequence[int], policy: str = "belady"):
+        if len(capacities) != num_hosts:
+            raise ValueError("need one capacity per host")
+        if policy not in ("lru", "belady"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.num_hosts = int(num_hosts)
+        self.capacities = [int(c) for c in capacities]
+        self.policy = policy
+
+    def _consumers(self, shuffler, epoch: int) -> np.ndarray:
+        from repro.sharding.placement import host_slice_bounds
+
+        parts = []
+        for batch in shuffler.epoch_batches(epoch):
+            b = host_slice_bounds(len(batch), self.num_hosts)
+            parts.append(np.repeat(np.arange(self.num_hosts), np.diff(b)))
+        return np.concatenate(parts) if parts else np.empty(0, np.int64)
+
+    def simulate(self, shuffler, epochs: int):
+        """Replay ``epochs`` epochs of ``shuffler``'s global stream.
+        Returns one dict per epoch:
+        ``{"local", "remote", "storage", "accesses"}`` (record counts)."""
+        n = shuffler.num_items
+        streams = [np.asarray(shuffler.epoch_index_stream(e), np.int64) for e in range(epochs)]
+        consumers = [self._consumers(shuffler, e) for e in range(epochs)]
+        flat = np.concatenate(streams) if streams else np.empty(0, np.int64)
+        nxt = BeladyPageCache.next_use_times(flat)
+        resident_host = np.full(n, -1, np.int64)
+        resident_next = np.full(n, _NEVER, np.int64)
+        counts = [0] * self.num_hosts
+        lru: list[OrderedDict[int, None]] = [OrderedDict() for _ in range(self.num_hosts)]
+        out = []
+        t = 0
+        for e in range(epochs):
+            stats = {"local": 0, "remote": 0, "storage": 0, "accesses": len(streams[e])}
+            for pos in range(len(streams[e])):
+                r = int(streams[e][pos])
+                h = int(consumers[e][pos])
+                g = int(resident_host[r])
+                if g == h:
+                    stats["local"] += 1
+                elif g >= 0:
+                    stats["remote"] += 1
+                    counts[g] -= 1  # release-on-serve
+                    if self.policy == "lru":
+                        del lru[g][r]
+                    resident_host[r] = -1
+                else:
+                    stats["storage"] += 1
+                # consumer-caches retention at h
+                if self.capacities[h] > 0:
+                    if g != h:
+                        resident_host[r] = h
+                        counts[h] += 1
+                    resident_next[r] = nxt[t]
+                    if self.policy == "lru":
+                        lru[h][r] = None
+                        lru[h].move_to_end(r)
+                        if counts[h] > self.capacities[h]:
+                            victim, _ = lru[h].popitem(last=False)
+                            resident_host[victim] = -1
+                            counts[h] -= 1
+                    elif counts[h] > self.capacities[h]:
+                        cand = np.flatnonzero(resident_host == h)
+                        victim = int(cand[np.argmax(resident_next[cand])])
+                        resident_host[victim] = -1
+                        resident_next[victim] = _NEVER
+                        counts[h] -= 1
+                elif g == h:  # pragma: no cover - capacity 0 can't hold
+                    resident_host[r] = -1
+                    counts[h] -= 1
+                t += 1
+            out.append(stats)
+        return out

@@ -123,6 +123,8 @@ class IOStats:
     coalesced_records: int = 0   # records served by those merged syscalls
     cache_hits: int = 0          # records served from the DRAM tier instead
     cache_hit_bytes: int = 0     # payload bytes those hits avoided reading
+    remote_hits: int = 0         # records served by a peer host's tier
+    remote_hit_bytes: int = 0    # payload bytes moved host-to-host instead
     retries: int = 0             # transient-fault re-attempts of an extent
     hedged_reads: int = 0        # duplicate reads issued for straggler chunks
     checksum_failures: int = 0   # records whose payload failed verification
@@ -204,6 +206,14 @@ class IOStats:
             self.cache_hits += records
             self.cache_hit_bytes += nbytes
 
+    def account_remote_hits(self, records: int, nbytes: int):
+        """Records served host-to-host by the cross-host tier
+        (``repro.prefetch.distributed``): not a storage read, not a local
+        DRAM hit — the middle tier's own column in the summaries."""
+        with self._lock:
+            self.remote_hits += records
+            self.remote_hit_bytes += nbytes
+
     # resilience counters: incremented as the events happen (not batched),
     # so they reconcile against a FaultInjector's log even when a batch
     # ultimately fails and charges no I/O
@@ -238,6 +248,7 @@ class IOStats:
             self.batch_records = self.batch_ios = 0
             self.coalesced_ios = self.coalesced_records = 0
             self.cache_hits = self.cache_hit_bytes = 0
+            self.remote_hits = self.remote_hit_bytes = 0
             self.retries = self.hedged_reads = 0
             self.checksum_failures = self.degraded_batches = 0
 

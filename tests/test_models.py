@@ -102,12 +102,37 @@ def test_loss_chunking_equivalence():
 
 
 def test_blocked_attention_equivalence():
+    """Blocked (flash-style online-softmax) attention vs full attention.
+
+    Strict check in float32: with f32 params/activations the two paths
+    are numerically equivalent to roundoff (measured bitwise-identical
+    on CPU XLA — the online softmax is an exact reassociation, and both
+    paths accumulate scores in f32), so any drift beyond 1e-6 is a real
+    block-boundary accumulation bug, which is what this guards."""
+    cfg = get_config("granite-3-8b", smoke=True).replace(dtype="float32")
+    params = M.init_params(cfg, RNG)
+    batch = _batch(cfg)
+    l0, _ = M.loss_fn(cfg, params, batch)
+    l1, _ = M.loss_fn(cfg.replace(attn_impl="blocked", attn_block=16), params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6)
+
+
+def test_blocked_attention_equivalence_bf16():
+    """Same comparison at the model's native bfloat16.
+
+    The blocked path casts each block's probabilities to bf16 before the
+    V matmul and rescales the f32 accumulator at block boundaries, while
+    full attention rounds the whole softmax row once — a different bf16
+    rounding *order*, not a logic bug (the f32 test above is the strict
+    one; this run measures rel diff ≈ 1.1e-4 on the smoke config, just
+    over the old 1e-4 gate).  Tolerance 5e-4 documents the expected
+    bf16 accumulation-order noise while still catching real breakage."""
     cfg = get_config("granite-3-8b", smoke=True)
     params = M.init_params(cfg, RNG)
     batch = _batch(cfg)
     l0, _ = M.loss_fn(cfg, params, batch)
     l1, _ = M.loss_fn(cfg.replace(attn_impl="blocked", attn_block=16), params, batch)
-    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=5e-4)
 
 
 def test_param_counts_match_published_sizes():

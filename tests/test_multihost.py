@@ -1,20 +1,65 @@
-"""Multi-host data-plane simulation: K hosts over one record store, each
-reading only its shard, with exact global coverage — plus async
-checkpointing and serving-cache growth."""
+"""Multi-host data plane: sharded sampling, the distributed clairvoyant
+record tier (placement / simulator / cluster byte-identity / peer-failure
+fallback), async checkpointing, and serving-cache growth.
+
+The numpy data-plane tests run in tier-1; only the whole-model and
+multi-process cases carry the ``slow`` marker.
+"""
 import numpy as np
 import pytest
 
-pytestmark = pytest.mark.slow  # heavy; excluded from tier-1 (see pytest.ini)
-
-import jax
-import jax.numpy as jnp
-
 from repro.core.pipeline import InputPipeline
 from repro.core.sampler import ShardedSampler
+from repro.core.shuffler import LIRSShuffler
 from repro.data.synthetic import decode_token_batch, make_token_dataset
-from repro.storage.record_store import RecordStore
+from repro.prefetch.distributed import ClusterFetcher, make_cluster
+from repro.sharding.placement import (
+    NO_HOST,
+    ClairvoyantPlacement,
+    host_slice_bounds,
+)
+from repro.storage.devices import distributed_hit_model
+from repro.storage.faults import RetryPolicy
+from repro.storage.page_cache import DistributedCacheSim
+from repro.storage.record_store import RecordStore, RecordWriter
+
+N, BATCH, RECORD = 256, 32, 64
+EPOCHS = 4
 
 
+# ----------------------------------------------------------------- stores
+@pytest.fixture(scope="module")
+def fixed_path(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("mh") / "fixed.rrec")
+    rng = np.random.default_rng(11)
+    with RecordWriter(path, record_size=RECORD) as w:
+        for _ in range(N):
+            w.append(rng.bytes(RECORD))
+    return path
+
+
+@pytest.fixture(scope="module")
+def variable_path(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("mh") / "var.rrec")
+    rng = np.random.default_rng(12)
+    with RecordWriter(path) as w:
+        for _ in range(N):
+            w.append(rng.bytes(int(rng.integers(4, 96))))
+    return path
+
+
+def _open(path):
+    """Open a store; variable-length files need the location index
+    installed per handle (each cluster host opens its own)."""
+    from repro.core.location import LocationGenerator
+
+    store = RecordStore(path)
+    if store.variable:
+        LocationGenerator().generate(store)
+    return store
+
+
+# ----------------------------------------------- sharded sampler coverage
 def test_hosts_read_disjoint_shards(tmp_path):
     n, gb, hosts, seq = 128, 32, 4, 16
     meta = make_token_dataset(str(tmp_path / "t.rrec"), n, seq, 64, seed=0)
@@ -50,7 +95,275 @@ def test_hosts_read_disjoint_shards(tmp_path):
         s.close()
 
 
+# --------------------------------------------------- clairvoyant placement
+def test_placement_tables_properties():
+    """Closed-form tables obey their own contract: holders are previous-
+    epoch consumers, per-host retention is capacity-bounded (and exactly
+    capacity under belady when the host consumed enough), and epoch 0 has
+    no holders to ask."""
+    n, hosts = 512, 4
+    sh = LIRSShuffler(n, 64, seed=9)
+    caps = [32, 32, 32, 32]
+    pl = ClairvoyantPlacement(sh, hosts, caps, policy="belady")
+    for e in range(3):
+        cons = pl.consumer_table(e)
+        assert cons.min() >= 0 and cons.max() < hosts  # full coverage
+        hold = pl.holder_after(e)
+        m = hold != NO_HOST
+        assert (hold[m] == cons[m]).all()  # only the consumer retains
+        for h in range(hosts):
+            assert int((hold == h).sum()) == caps[h]
+    assert (pl.peer_for(np.arange(n), 0) == NO_HOST).all()
+    assert pl.expected_storage_reads() == n - sum(caps)
+    # lru placement: every consumer is a candidate holder
+    pl_lru = ClairvoyantPlacement(sh, hosts, caps, policy="lru")
+    assert (pl_lru.holder_after(0) == pl_lru.consumer_table(0)).all()
+
+
+def test_placement_last_epoch_retains_nothing():
+    sh = LIRSShuffler(128, 16, seed=4)
+    pl = ClairvoyantPlacement(sh, 2, [16, 16], max_epochs=3)
+    assert (pl.holder_after(2) == NO_HOST).all()  # nobody consumes epoch 3
+    assert (pl.holder_after(1) != NO_HOST).sum() == 32
+
+
+def test_host_slice_bounds_cover_and_match_sampler():
+    for blen in (1, 7, 32, 33):
+        for hosts in (1, 2, 4, 5):
+            b = host_slice_bounds(blen, hosts)
+            assert b[0] == 0 and b[-1] == blen
+            assert (np.diff(b) >= 0).all()
+
+
+@pytest.mark.parametrize("hosts", [1, 2, 4])
+def test_simulator_matches_pigeonhole_floor(hosts):
+    """Record-level replay of the distributed tier hits the closed-form
+    aggregate floor exactly: from epoch 1 on, fleet storage reads are
+    ``n - sum(capacity_h)`` per epoch under belady, independent of H."""
+    n, batch, cap = 1024, 128, 256
+    sh = LIRSShuffler(n, batch, seed=3)
+    caps = [cap // hosts] * hosts
+    sim = DistributedCacheSim(hosts, caps, policy="belady")
+    pl = ClairvoyantPlacement(sh, hosts, caps, policy="belady")
+    for e, stats in enumerate(sim.simulate(sh, 4)):
+        assert stats["accesses"] == n
+        assert stats["local"] + stats["remote"] + stats["storage"] == n
+        if e >= 1:
+            assert stats["storage"] == pl.expected_storage_reads()
+        if hosts == 1:
+            assert stats["remote"] == 0
+
+
+@pytest.mark.parametrize("policy", ["lru", "belady"])
+def test_distributed_hit_model_matches_simulator(policy):
+    """The local/remote/storage closed forms track the simulator: total
+    hit is capacity-shaped (the single-host model at c_global), and the
+    holder is uniform over hosts, so local = hit/H, remote = hit(H-1)/H."""
+    n, batch, hosts, c = 1024, 128, 4, 0.25
+    sh = LIRSShuffler(n, batch, seed=6)
+    sim = DistributedCacheSim(hosts, [int(c * n) // hosts] * hosts, policy=policy)
+    eps = sim.simulate(sh, 5)
+    model = distributed_hit_model(c, hosts, policy=policy)
+    for key in ("local", "remote", "storage"):
+        meas = float(np.mean([e[key] for e in eps[2:]])) / n
+        assert abs(meas - model[key]) <= 0.05, (key, meas, model[key])
+
+
+# ----------------------------------------------------- live cluster plane
+@pytest.mark.parametrize("policy", ["lru", "belady"])
+@pytest.mark.parametrize("hosts", [1, 2, 4])
+@pytest.mark.parametrize("kind", ["dense", "ragged"])
+def test_cluster_batches_byte_identical(
+    kind, hosts, policy, fixed_path, variable_path
+):
+    """The acceptance invariant: a global batch served through an H-host
+    cluster (local tier -> peers -> storage) is byte-identical to reading
+    it straight from the store, every epoch, dense and ragged."""
+    path = fixed_path if kind == "dense" else variable_path
+    ref = _open(path)
+    sh = LIRSShuffler(N, BATCH, seed=5, avg_instance_bytes=RECORD)
+    with make_cluster(
+        lambda: _open(path),
+        sh,
+        hosts,
+        budget_bytes=N * RECORD // 2,
+        lookahead=4,
+        gap_bytes=0,
+        workers=1,
+        max_epochs=EPOCHS,
+        policy=policy,
+    ) as cl:
+        fetcher = ClusterFetcher(cl)
+        for e in range(EPOCHS):
+            for idx in fetcher.batch_iter(e):
+                got = fetcher(idx)
+                if kind == "dense":
+                    np.testing.assert_array_equal(
+                        np.asarray(got), ref.read_batch_into(idx)
+                    )
+                else:
+                    assert got.tolist() == ref.read_batch_ragged(idx).tolist()
+    ref.close()
+
+
+def test_cluster_aggregate_reads_near_floor(fixed_path):
+    """Fleet storage reads per steady epoch sit at the pigeonhole floor
+    ``n - sum(capacity_h)`` plus at most the epoch-edge window race (the
+    lookahead batches whose holder wasn't populated yet), and every
+    remote serve is accounted on both ends."""
+    hosts, lookahead = 4, 4
+    sh = LIRSShuffler(N, BATCH, seed=7, avg_instance_bytes=RECORD)
+    with make_cluster(
+        lambda: RecordStore(fixed_path),
+        sh,
+        hosts,
+        budget_bytes=N * RECORD // 2,
+        lookahead=lookahead,
+        gap_bytes=0,
+        max_epochs=EPOCHS,
+        policy="belady",
+    ) as cl:
+        fetcher = ClusterFetcher(cl)
+        per_epoch, prev = [], 0
+        for e in range(EPOCHS):
+            for idx in fetcher.batch_iter(e):
+                fetcher(idx)
+            cl.drain()
+            total = cl.aggregate_io()["storage_records"]
+            per_epoch.append(total - prev)
+            prev = total
+        floor = cl.placement.expected_storage_reads()
+        for reads in per_epoch[1:]:
+            assert floor <= reads <= floor + 2 * lookahead * hosts, (
+                per_epoch,
+                floor,
+            )
+        agg = cl.aggregate_io()
+        assert agg["peer_failures"] == 0 and agg["peer_errors"] == 0
+        assert agg["remote_hits"] > 0
+        assert agg["remote_hits"] == agg["remote_served"]
+        assert agg["remote_hit_bytes"] == agg["remote_served_bytes"]
+
+
+def test_peer_failure_falls_back_to_storage(fixed_path):
+    """A dead peer degrades to storage reads, never corrupts a batch:
+    retries are bounded, the fetch counts a peer_failure, and bytes stay
+    identical to the direct read."""
+    ref = RecordStore(fixed_path)
+    sh = LIRSShuffler(N, BATCH, seed=2, avg_instance_bytes=RECORD)
+    retry = RetryPolicy(
+        max_retries=1, backoff_s=1e-4, backoff_cap_s=1e-3, deadline_s=1.0
+    )
+    with make_cluster(
+        lambda: RecordStore(fixed_path),
+        sh,
+        2,
+        budget_bytes=N * RECORD // 2,
+        lookahead=4,
+        gap_bytes=0,
+        max_epochs=3,
+        policy="belady",
+        retry=retry,
+    ) as cl:
+        fetcher = ClusterFetcher(cl)
+        for idx in fetcher.batch_iter(0):  # warm epoch, peers healthy
+            fetcher(idx)
+        cl.transport.down.add(0)  # host 0 stops answering
+        for e in (1, 2):
+            for idx in fetcher.batch_iter(e):
+                np.testing.assert_array_equal(
+                    np.asarray(fetcher(idx)), ref.read_batch_into(idx)
+                )
+        agg = cl.aggregate_io()
+        assert agg["peer_failures"] > 0
+        assert agg["peer_errors"] >= agg["peer_failures"]  # retried first
+    ref.close()
+
+
+# --------------------------------------- real processes over real sockets
+def _tcp_mesh_target(spec, path, n, batch, budget_bytes, epochs):
+    """One genuine host process: PeerServer over its cache, TCPTransport
+    to the peers discovered via all_gather, lockstep epochs."""
+    from repro.prefetch.cache import TieredCache
+    from repro.prefetch.distributed import RemoteFetcher, RemoteTier
+    from repro.prefetch.fetcher import PrefetchingFetcher
+    from repro.prefetch.transport import PeerServer, TCPTransport
+    from repro.sharding.placement import HostShardView
+
+    sh = LIRSShuffler(n, batch, seed=5)
+    store = RecordStore(path)
+    ref = RecordStore(path)
+    cache = TieredCache(store.lengths(), budget_bytes, policy="belady")
+    server = PeerServer(cache)
+    addrs = spec.all_gather(server.address)
+    transport = TCPTransport(
+        {h: a for h, a in addrs.items() if h != spec.host_id}
+    )
+    placement = ClairvoyantPlacement(
+        sh,
+        spec.num_hosts,
+        [cache.capacity] * spec.num_hosts,  # equal budgets, equal caps
+        policy="belady",
+        max_epochs=epochs,
+    )
+    remote = RemoteTier(
+        spec.host_id, placement, RemoteFetcher(transport, spec.host_id)
+    )
+    fetcher = PrefetchingFetcher(
+        store,
+        HostShardView(sh, spec.num_hosts, spec.host_id),
+        lookahead=2,
+        gap_bytes=0,
+        workers=1,
+        background=False,
+        max_epochs=epochs,
+        cache=cache,
+        policy="belady",
+        remote=remote,
+        placement=placement,
+    )
+    for e in range(epochs):
+        for part in fetcher.batch_iter(e):
+            got = fetcher(part)
+            np.testing.assert_array_equal(got, ref.read_batch_into(part))
+            spec.all_gather(None)  # per-step lockstep, peers stay populated
+    stats = spec.all_gather(
+        {
+            "remote_hits": remote.fetcher.remote_hits,
+            "peer_failures": remote.fetcher.peer_failures,
+            "storage_records": store.stats.batch_records,
+        }
+    )
+    assert sum(v["peer_failures"] for v in stats.values()) == 0
+    assert sum(v["remote_hits"] for v in stats.values()) > 0
+    # the cross-host tier avoided rereads: fleet reads < every-record-every-epoch
+    assert sum(v["storage_records"] for v in stats.values()) < epochs * n
+    fetcher.close()
+    server.close()
+    transport.close()
+    ref.close()
+    store.close()
+
+
+@pytest.mark.slow
+def test_tcp_process_mesh_cluster(fixed_path):
+    """3 real processes, real sockets: byte-identity and remote serving
+    hold over the wire protocol, not just the in-process transport."""
+    from repro.launch.mesh import run_cpu_process_mesh
+
+    codes = run_cpu_process_mesh(
+        _tcp_mesh_target,
+        3,
+        args=(fixed_path, N, BATCH, N * RECORD // 4, 3),
+        round_timeout_s=120.0,
+    )
+    assert all(c == 0 for c in codes)
+
+
+# ------------------------------------------------- checkpoint + kv-cache
 def test_async_checkpoint_roundtrip(tmp_path):
+    import jax.numpy as jnp
+
     from repro.train.checkpoint import CheckpointManager
 
     cm = CheckpointManager(str(tmp_path))
@@ -60,13 +373,19 @@ def test_async_checkpoint_roundtrip(tmp_path):
     cm.wait()
     got, extra, step = cm.restore(state)
     assert step == 6 and extra["epoch"] == 2
-    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(100, dtype=np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(got["w"]), np.arange(100, dtype=np.float32)
+    )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["granite-3-8b", "whisper-tiny"])
 def test_extend_cache_decode_matches_prefill(arch):
     """prefill(P) -> extend -> teacher-forced decode(T) reproduces
     prefill(P+T)'s last-token logits."""
+    import jax
+    import jax.numpy as jnp
+
     from repro.configs import get_config
     from repro.models import model as M
 
