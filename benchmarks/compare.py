@@ -22,10 +22,12 @@ throughput     records/s, speedup ratios       50 % relative (shared
 hit_rate       measured DRAM-tier hit rate     0.02 absolute
 factor         records per coalesced I/O       15 % relative
 bytes          storage / wasted bytes          10 % relative + 4 KiB
-overhead       resilience-scaffold cost frac   0.02 absolute (clamped
-                                               at 0, so the gate is the
+overhead       resilience-scaffold cost frac,  0.02 absolute (clamped
+               tracing-off obs cost frac       at 0, so the gate is the
                                                ISSUE's own <2 % bar,
                                                not baseline-relative)
+overhead_on    tracing-enabled obs cost frac   0.05 absolute (same
+                                               clamped-at-0 scheme)
 zero           rejected, stray unpins          must be exactly 0
 =============  ==============================  =======================
 
@@ -62,6 +64,7 @@ KINDS: Dict[str, Tuple[bool, float, float]] = {
     "factor": (True, 0.15, 0.0),
     "bytes": (False, 0.10, 4096.0),
     "overhead": (False, 0.0, 0.02),
+    "overhead_on": (False, 0.0, 0.05),
     "zero": (False, 0.0, 0.0),
 }
 
@@ -138,6 +141,27 @@ def _fault_overhead_metrics(res: dict) -> Metrics:
     }
 
 
+def _obs_overhead_metrics(res: dict) -> Metrics:
+    return {
+        # clamped at 0 like the fault scaffold: with baseline 0 the
+        # absolute tolerance IS the ISSUE's gate (<2 % tracing off,
+        # <5 % tracing on), not a baseline-relative drift allowance
+        "tracing_off_overhead_frac": (
+            "overhead",
+            max(0.0, res["tracing_off_overhead_frac"]),
+        ),
+        "tracing_on_overhead_frac": (
+            "overhead_on",
+            max(0.0, res["tracing_on_overhead_frac"]),
+        ),
+        "baseline_records_per_s": (
+            "throughput",
+            res["baseline_records_per_s"],
+        ),
+        "byte_mismatches": ("zero", res["byte_mismatches"]),
+    }
+
+
 def _multihost_read_metrics(res: dict) -> Metrics:
     h = res["headline"]
     m: Metrics = {
@@ -173,6 +197,7 @@ EXTRACTORS: Dict[str, Callable[[dict], Metrics]] = {
     "batch_read": _batch_read_metrics,
     "fault_overhead": _fault_overhead_metrics,
     "multihost_read": _multihost_read_metrics,
+    "obs_overhead": _obs_overhead_metrics,
 }
 
 

@@ -1,0 +1,307 @@
+"""obs_overhead — what the observability layer costs on the read path.
+
+The ISSUE's bar: with tracing *disabled* (the production default) the
+instrumented hot path must stay within **2 %** of an uninstrumented
+baseline, and with tracing *enabled* within **5 %**.  Python can't
+compile the spans out, so the baseline stubs the obs entry points with
+null no-ops — as close to compiled-out as the language gets.  Variants,
+timed interleaved over identical coalesced batch reads (best-of per
+variant, same index batches):
+
+  * ``baseline``     — ``record_store``'s obs hooks swapped for null
+                       stubs: no flag check, no clock, no histogram.
+                       The apples-to-apples denominator.
+  * ``tracing_off``  — real obs layer, tracing disabled.  The gated
+                       number is ``tracing_off_overhead_frac`` =
+                       tracing_off/baseline − 1 (< 2 %).
+  * ``tracing_on``   — tracing enabled into a fresh per-rep ring.  The
+                       gated number is ``tracing_on_overhead_frac``
+                       (< 5 %).
+
+Every variant must return byte-identical batches (``byte_mismatches``
+is gated at exactly 0).  Also emits informational span-cost microbench
+rows (ns per ``span()`` enter/exit, disabled vs enabled).
+
+``--trace-demo PATH`` instead runs a small 2-host Belady training job
+with tracing on and writes the Chrome trace-event JSON to PATH — the
+nightly workflow uploads it as a browsable Perfetto artifact.
+
+Emits JSON to benchmarks/results/obs_overhead.json and harness CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import cached
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.storage import record_store
+from repro.storage.record_store import PAGE, RecordStore, write_records
+
+N_RECORDS = 8_192
+RECORD_SIZE = 4_096
+BATCH = 1_024
+N_BATCHES = 8
+WORKERS = 4
+GAP = 4 * PAGE
+REPS = 15
+SPAN_ITERS = 100_000
+OFF_GATE = 0.02  # the ISSUE's bar: tracing disabled costs < 2 %
+ON_GATE = 0.05   # tracing enabled costs < 5 %
+
+
+class _NullSpan:
+    duration_s = 0.0
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _NullTrace:
+    """What a compiled-out build would leave behind: nothing."""
+
+    @staticmethod
+    def enabled():
+        return False
+
+    @staticmethod
+    def span(name, cat="", args=None):
+        return _NULL_SPAN
+
+    @staticmethod
+    def timed(name, cat="", args=None):
+        return _NULL_SPAN
+
+    @staticmethod
+    def instant(name, cat="", args=None):
+        return None
+
+
+class _NullMetrics:
+    @staticmethod
+    def observe(name, seconds):
+        return None
+
+
+def _swap_obs(trace_mod, metrics_mod):
+    old = (record_store._trace, record_store._metrics)
+    record_store._trace = trace_mod
+    record_store._metrics = metrics_mod
+    return old
+
+
+def _bench(store, batches):
+    """Interleaved best-of timing: one rep reads every batch through every
+    variant before the next rep starts (order rotated per rep so no
+    variant always sits in the same drift phase), so box noise hits all
+    variants alike.  One store, one page-cache temperature — only the
+    obs layer varies."""
+
+    def measure():
+        t0 = time.perf_counter()
+        for idx in batches:
+            store.read_batch_into(idx, gap_bytes=GAP, workers=WORKERS)
+        return time.perf_counter() - t0
+
+    def run_baseline():
+        old = _swap_obs(_NullTrace, _NullMetrics)
+        try:
+            return measure()
+        finally:
+            record_store._trace, record_store._metrics = old
+
+    def run_off():
+        obs_trace.disable()
+        return measure()
+
+    def run_on():
+        obs_trace.resume()
+        try:
+            return measure()
+        finally:
+            obs_trace.disable()
+
+    variants = [
+        ("baseline", run_baseline),
+        ("tracing_off", run_off),
+        ("tracing_on", run_on),
+    ]
+    times = {name: [] for name, _ in variants}
+
+    # one recorder for the whole bench: re-enabling per rep would hand the
+    # measured region a fresh, never-touched ring, and the first-touch
+    # page faults (not the spans) would then dominate the "overhead"
+    obs_trace.enable()
+    with obs_trace.span("bench/warmup", "bench"):
+        pass  # pre-touch the calling thread's ring
+    obs_trace.disable()
+    try:
+        for rep in range(REPS):
+            got = {}
+            for k in range(len(variants)):
+                name, fn = variants[(rep + k) % len(variants)]
+                got[name] = fn()
+            for name, t in got.items():
+                times[name].append(t)
+    finally:
+        obs_trace.disable()
+
+    # the gated number pairs each rep's variants against the SAME rep's
+    # baseline and takes the median ratio: box drift moves all three
+    # adjacent measures together and cancels, where a ratio of
+    # best-overall times rides whichever rep each minimum landed in
+    best = {name: min(ts) for name, ts in times.items()}
+    overhead = {
+        name: float(np.median(
+            [t / b for t, b in zip(times[name], times["baseline"])]
+        )) - 1.0
+        for name in ("tracing_off", "tracing_on")
+    }
+    return best, overhead
+
+
+def _span_cost_ns(enabled: bool) -> float:
+    """ns per span enter/exit — the primitive's own cost, informational."""
+    if enabled:
+        obs_trace.enable()
+    else:
+        obs_trace.disable()
+    try:
+        t0 = time.perf_counter_ns()
+        for _ in range(SPAN_ITERS):
+            with obs_trace.span("bench/span", "bench"):
+                pass
+        return (time.perf_counter_ns() - t0) / SPAN_ITERS
+    finally:
+        obs_trace.disable()
+
+
+def run(force: bool = False):
+    def compute():
+        tmp = tempfile.mkdtemp(prefix="obs_overhead_")
+        rng = np.random.default_rng(0)
+        recs = [rng.bytes(RECORD_SIZE) for _ in range(N_RECORDS)]
+        path = f"{tmp}/data.rrec"
+        write_records(path, recs, record_size=RECORD_SIZE)
+        store = RecordStore(path)
+        batches = [rng.permutation(N_RECORDS)[:BATCH] for _ in range(N_BATCHES)]
+
+        # correctness before speed: byte-identical batches in every mode
+        want = [b"".join(recs[i] for i in idx) for idx in batches]
+
+        def canary():
+            return sum(
+                store.read_batch_into(
+                    idx, gap_bytes=GAP, workers=WORKERS
+                ).tobytes() != w
+                for idx, w in zip(batches, want)
+            )
+
+        old = _swap_obs(_NullTrace, _NullMetrics)
+        try:
+            mismatches = canary()
+        finally:
+            record_store._trace, record_store._metrics = old
+        obs_trace.disable()
+        mismatches += canary()
+        obs_trace.enable()
+        try:
+            mismatches += canary()
+        finally:
+            obs_trace.disable()
+
+        best, overhead = _bench(store, batches)
+        store.close()
+        total = BATCH * N_BATCHES
+        out = {
+            "num_records": N_RECORDS,
+            "record_size": RECORD_SIZE,
+            "batch": BATCH,
+            "workers": WORKERS,
+            "reps": REPS,
+            "byte_mismatches": int(mismatches),
+            "tracing_off_overhead_frac": overhead["tracing_off"],
+            "tracing_on_overhead_frac": overhead["tracing_on"],
+            "off_gate": OFF_GATE,
+            "on_gate": ON_GATE,
+            "span_ns_disabled": _span_cost_ns(False),
+            "span_ns_enabled": _span_cost_ns(True),
+        }
+        for name, t in best.items():
+            out[f"{name}_records_per_s"] = total / t
+        return out
+
+    return cached("obs_overhead", compute, force)
+
+
+def trace_demo(path: str) -> dict:
+    """Run a tiny 2-host Belady training job with tracing on and write
+    the Chrome trace-event JSON to ``path`` (nightly Perfetto artifact).
+    Returns the run summary."""
+    from repro.launch.train import main as train_main
+
+    return train_main([
+        "--smoke", "--num-records", "512", "--seq-len", "32",
+        "--batch", "16", "--epochs", "3", "--cache-mb", "0.06",
+        "--hosts", "2", "--eviction-policy", "belady",
+        "--trace", path,
+    ])
+
+
+def rows():
+    res = run()
+    out = []
+    base = res["baseline_records_per_s"]
+    for name in ("baseline", "tracing_off", "tracing_on"):
+        rps = res[f"{name}_records_per_s"]
+        out.append(
+            (
+                f"obs_overhead/{name}",
+                1e6 / rps,  # us per record
+                f"{rps:,.0f} rec/s x{rps / base:.3f} vs baseline",
+            )
+        )
+    for key, gate in (("tracing_off_overhead_frac", res["off_gate"]),
+                      ("tracing_on_overhead_frac", res["on_gate"])):
+        out.append(
+            (
+                f"obs_overhead/{key}",
+                res[key] * 1e6,  # harness wants a number
+                f"{res[key]:+.4f} (gate < {gate:.2f}), byte_mismatches="
+                f"{res['byte_mismatches']}",
+            )
+        )
+    out.append(
+        (
+            "obs_overhead/span_ns",
+            res["span_ns_enabled"] / 1e3,
+            f"{res['span_ns_disabled']:.0f} ns disabled / "
+            f"{res['span_ns_enabled']:.0f} ns enabled per span",
+        )
+    )
+    return out
+
+
+if __name__ == "__main__":
+    if len(sys.argv) >= 3 and sys.argv[1] == "--trace-demo":
+        summary = trace_demo(sys.argv[2])
+        sys.exit(0 if summary.get("drift", {}).get("ok", True) else 1)
+    res = run(force=True)
+    for r in rows():
+        print(",".join(map(str, r)))
+    bad = (
+        res["byte_mismatches"] != 0
+        or res["tracing_off_overhead_frac"] >= OFF_GATE
+        or res["tracing_on_overhead_frac"] >= ON_GATE
+    )
+    sys.exit(1 if bad else 0)

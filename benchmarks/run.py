@@ -22,6 +22,7 @@ def main() -> None:
         fault_overhead,
         memory_overhead,
         multihost_read,
+        obs_overhead,
         page_aware,
         pipeline_throughput,
         prefetch,
@@ -45,6 +46,7 @@ def main() -> None:
         "prefetch": prefetch,                   # clairvoyant prefetch + DRAM tier
         "multihost_read": multihost_read,       # distributed tier aggregate-read invariant
         "fault_overhead": fault_overhead,       # resilience scaffold cost gate
+        "obs_overhead": obs_overhead,           # observability cost gate
         "roofline": roofline,                   # §Roofline (from dry-run)
     }
     if args.only:

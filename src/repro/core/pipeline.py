@@ -32,12 +32,12 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator, Optional
 
 import numpy as np
 
+from repro.obs import trace as _trace
 from repro.storage.record_store import (
     PAGE,
     BatchBufferRing,
@@ -121,9 +121,9 @@ class InputPipeline:
     def _emit(self, raw: Any) -> Iterator[Any]:
         item = self.put_fn(raw) if self.put_fn is not None else raw
         self.stats.batches += 1
-        tc = time.perf_counter()
-        yield item
-        self.stats.t_comp += time.perf_counter() - tc
+        with _trace.timed("pipeline/step", "pipeline") as sp:
+            yield item
+        self.stats.t_comp += sp.duration_s
         if self.recycle_fn is not None:
             self.recycle_fn(raw)
 
@@ -145,9 +145,9 @@ class InputPipeline:
             seq = -1
             try:
                 for seq, idx in enumerate(self.batch_iter_fn(epoch)):
-                    t0 = time.perf_counter()
-                    data = self.fetch_fn(idx)
-                    self.stats.add_load(time.perf_counter() - t0)
+                    with _trace.timed("pipeline/fetch", "pipeline") as sp:
+                        data = self.fetch_fn(idx)
+                    self.stats.add_load(sp.duration_s)
                     if not _put_until(q, data, stop):
                         return
             except Exception as e:  # pragma: no cover - surfaced to consumer
@@ -159,9 +159,9 @@ class InputPipeline:
         th.start()
         try:
             while True:
-                t0 = time.perf_counter()
-                item = q.get()
-                self.stats.t_wait += time.perf_counter() - t0
+                with _trace.timed("pipeline/wait", "pipeline") as sp:
+                    item = q.get()
+                self.stats.t_wait += sp.duration_s
                 if item is DONE:
                     break
                 yield from self._emit(item)
@@ -214,9 +214,9 @@ class InputPipeline:
                             credit.wait(0.1)
                     if stop.is_set() or err:
                         break
-                    t0 = time.perf_counter()
-                    data = self.fetch_fn(idx)
-                    self.stats.add_load(time.perf_counter() - t0)
+                    with _trace.timed("pipeline/fetch", "pipeline") as sp:
+                        data = self.fetch_fn(idx)
+                    self.stats.add_load(sp.duration_s)
                     if not _put_until(q, (seq, data), stop):
                         return
             except Exception as e:
@@ -240,9 +240,9 @@ class InputPipeline:
                 if emitted[0] in pending:
                     raw = pending.pop(emitted[0])
                 else:
-                    t0 = time.perf_counter()
-                    got = q.get()
-                    self.stats.t_wait += time.perf_counter() - t0
+                    with _trace.timed("pipeline/wait", "pipeline") as sp:
+                        got = q.get()
+                    self.stats.t_wait += sp.duration_s
                     if got is DONE:
                         done += 1
                         continue

@@ -16,8 +16,10 @@ import tempfile
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data.synthetic import decode_token_batch, make_token_dataset
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.storage.faults import FaultInjector, FaultSpec
-from repro.storage.record_store import RecordStore
+from repro.storage.record_store import IOStats, RecordStore
 from repro.train.loop import Trainer, TrainLoopConfig, make_shuffler
 from repro.train.optimizer import AdamWConfig
 
@@ -79,11 +81,27 @@ def build_argparser():
                     help="RREC v2 payload verification: auto (only "
                          "retried/hedged extents — free on the clean "
                          "path), full (every record), off")
+    ap.add_argument("--trace", default="",
+                    help="record spans across the whole I/O stack "
+                         "(storage/cache/remote/pipeline/train) and write "
+                         "a Chrome trace-event JSON here at exit — open "
+                         "it in Perfetto (ui.perfetto.dev)")
+    ap.add_argument("--metrics-json", default="",
+                    help="dump the metrics-registry snapshot (counters, "
+                         "gauges, latency histograms) as JSON here at exit")
+    ap.add_argument("--drift-device", default="",
+                    choices=["", "hdd", "ssd", "optane"],
+                    help="also price measured vs modeled storage reads "
+                         "through this Table 2 device model in the drift "
+                         "report (needs --cache-mb > 0, --hosts 1)")
     return ap
 
 
 def main(argv=None):
     args = build_argparser().parse_args(argv)
+    if args.trace:
+        obs_trace.enable()
+    registry = obs_metrics.reset_registry()
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.smoke:
         cfg = cfg.replace(vocab_size=min(cfg.vocab_size, 512))
@@ -189,6 +207,16 @@ def main(argv=None):
                 store.read_batch_into(idx, workers=args.io_workers), seq
             )
 
+    # per-epoch counter snapshots for the drift report: cumulative at each
+    # epoch end, so adjacent deltas give per-epoch (steady-state) windows
+    epoch_snaps: list = []
+    if cluster is not None:
+        def epoch_hook(epoch):
+            epoch_snaps.append(cluster.aggregate_io())
+    else:
+        def epoch_hook(epoch):
+            epoch_snaps.append(store.stats.snapshot())
+
     trainer = Trainer(
         cfg,
         fetch,
@@ -200,7 +228,17 @@ def main(argv=None):
         opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=10),
         num_producers=args.io_producers,
         batch_iter_fn=batch_iter_fn,
+        epoch_hook=epoch_hook,
     )
+
+    obs_metrics.bind_store(registry, store)
+    obs_metrics.bind_pipeline(registry, trainer.pipeline)
+    if cluster is not None:
+        obs_metrics.bind_cluster(registry, cluster)
+    elif fetcher is not None:
+        obs_metrics.bind_fetcher(registry, fetcher)
+    if injector is not None:
+        obs_metrics.bind_fault_log(registry, injector.log)
     if args.resume and trainer.try_resume():
         print(f"resumed at step {trainer.global_step}")
     summary = trainer.train()
@@ -248,6 +286,62 @@ def main(argv=None):
     }
     if injector is not None:
         summary["io_resilience"]["injected"] = injector.counters()
+
+    # model-vs-measured drift over the steady (warm) epochs: the cold
+    # first epoch is all misses by construction, so it only anchors the
+    # delta window
+    if len(epoch_snaps) >= 2 and (cluster is not None or fetcher is not None):
+        from repro.obs import drift
+
+        n = store.num_records
+        steady_epochs = len(epoch_snaps) - 1
+        window_frac = min(1.0, args.prefetch_lookahead * args.batch / n)
+        first, last = epoch_snaps[0], epoch_snaps[-1]
+        if cluster is not None:
+            d = {k: last[k] - first[k] for k in last}
+            report = drift.distributed_report(
+                n_records=n,
+                hosts=args.hosts,
+                capacity_frac_global=min(
+                    1.0, cluster.placement.aggregate_capacity() / n
+                ),
+                policy=args.eviction_policy,
+                window_frac=window_frac,
+                epochs=steady_epochs,
+                remote_hits=d["remote_hits"],
+                storage_records=d["storage_records"],
+            )
+        else:
+            d = IOStats.delta(last, first)
+            report = drift.single_host_report(
+                n_records=n,
+                record_bytes=store.record_size or 0,
+                capacity_frac=min(1.0, fetcher.cache.capacity / n),
+                policy=args.eviction_policy,
+                planner_on=bool(fetcher.planner),
+                window_frac=window_frac,
+                batch_frac=min(1.0, args.batch / n),
+                epochs=steady_epochs,
+                storage_records=d["batch_records"],
+                storage_ios=d["batch_ios"],
+                storage_bytes=d["bytes_read"],
+                device=args.drift_device or None,
+            )
+        summary["drift"] = report.to_dict()
+
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            f.write(registry.to_json(indent=1))
+        summary["metrics_json"] = args.metrics_json
+    if args.trace:
+        rec = obs_trace.get_recorder()
+        if rec is not None:
+            doc = rec.export_chrome(args.trace)
+            summary["trace"] = {
+                "path": args.trace,
+                "events": len(doc["traceEvents"]),
+            }
+        obs_trace.disable()
     print(json.dumps(summary, indent=1))
     return summary
 

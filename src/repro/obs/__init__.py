@@ -1,0 +1,72 @@
+"""Unified observability layer for the LIRS I/O stack.
+
+Three parts, one import:
+
+* :mod:`repro.obs.trace` — a low-overhead trace recorder: thread-local
+  preallocated ring buffers of span/instant events on the monotonic
+  clock, no locks on the hot path, a no-op singleton when disabled,
+  exported as Chrome trace-event JSON (load the file in Perfetto or
+  ``chrome://tracing``).  Spans are threaded through every layer of the
+  stack: storage preads/retries/hedges, cache gather/evict/admit,
+  peer serve/fetch, pipeline producer/consumer waits, train steps.
+* :mod:`repro.obs.metrics` — a metrics registry (counters, gauges,
+  log-bucketed latency histograms) that absorbs the scattered counter
+  structs (``IOStats``, ``TieredCache``, scheduler, ``FaultLog``,
+  remote tier) behind one snapshot/delta API with JSON and
+  Prometheus-text export.
+* :mod:`repro.obs.drift` — an epoch-end drift detector comparing live
+  measurements against the closed forms in ``repro.storage.devices``
+  (``hit = c`` under Belady, the planner's ``(1−c)·n`` storage-read
+  floor, the ``distributed_hit_model`` tier split, Table 2 epoch read
+  pricing), with per-metric tolerances matching the benchmark gates.
+"""
+from repro.obs import metrics, trace
+from repro.obs.metrics import MetricsRegistry, get_registry
+from repro.obs.trace import (
+    TraceRecorder,
+    disable,
+    enable,
+    enabled,
+    get_recorder,
+    instant,
+    resume,
+    span,
+    timed,
+    tracing,
+)
+
+
+def __getattr__(name):
+    # drift pulls in repro.storage.devices; loading it lazily keeps the
+    # instrumented storage modules free to import repro.obs at their own
+    # import time without a package cycle.
+    if name in ("drift", "DriftCheck", "DriftReport"):
+        import importlib
+
+        drift = importlib.import_module("repro.obs.drift")
+        globals()["drift"] = drift
+        globals()["DriftCheck"] = drift.DriftCheck
+        globals()["DriftReport"] = drift.DriftReport
+        return globals()[name]
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+
+
+__all__ = [
+    "DriftCheck",
+    "DriftReport",
+    "MetricsRegistry",
+    "TraceRecorder",
+    "disable",
+    "drift",
+    "enable",
+    "enabled",
+    "get_recorder",
+    "get_registry",
+    "instant",
+    "metrics",
+    "resume",
+    "span",
+    "timed",
+    "trace",
+    "tracing",
+]

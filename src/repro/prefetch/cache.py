@@ -50,6 +50,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import trace as _trace
 from repro.storage.devices import EVICTION_POLICIES
 
 # "no known future use": sorts after every real stream position, so
@@ -272,7 +273,7 @@ class TieredCache:
         use — for a prefetch plan that is its *upcoming window use*, for
         a demand insert its position in the next epoch's stream."""
         ids = np.asarray(ids, np.int64)
-        with self._lock:
+        with _trace.span("cache/admit", "cache"), self._lock:
             out = self._slot_of[ids] >= 0
             fresh = ~out & (self.record_lengths[ids] <= self.slot_bytes)
             idx = np.flatnonzero(fresh)
@@ -301,7 +302,7 @@ class TieredCache:
         insert/evict cannot recycle a slot mid-copy.
         """
         ids = np.asarray(ids, np.int64)
-        with self._lock:
+        with _trace.span("cache/gather", "cache"), self._lock:
             slots = self._slot_of[ids]
             hit = slots >= 0
             nh = int(hit.sum())
@@ -351,7 +352,7 @@ class TieredCache:
             return 0
         if next_use is not None:
             next_use = np.asarray(next_use, np.int64)
-        with self._lock:
+        with _trace.span("cache/insert", "cache"), self._lock:
             uniq, first = np.unique(ids, return_index=True)
             keep = self._slot_of[uniq] < 0
             lens = self.record_lengths[uniq]
@@ -418,6 +419,9 @@ class TieredCache:
         self._free.extend(int(s) for s in occupied)
         self._used_bytes -= int(self.record_lengths[cand_ids].sum())
         self.evictions += len(cand_ids)
+        if _trace.enabled():
+            _trace.instant("cache/evict", "cache",
+                           args={"evicted": len(cand_ids)})
 
     def evict(self, m: int):
         with self._lock:
@@ -468,7 +472,7 @@ class TieredCache:
         ``remote_served`` / ``remote_served_bytes``.
         """
         ids = np.asarray(ids, np.int64)
-        with self._lock:
+        with _trace.span("cache/export", "cache"), self._lock:
             slots = self._slot_of[ids]
             found = slots >= 0
             fids = ids[found]

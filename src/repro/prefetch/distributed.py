@@ -39,6 +39,8 @@ from typing import Callable, Dict, Iterator, List, Optional
 
 import numpy as np
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.prefetch.cache import TieredCache, copy_records
 from repro.prefetch.fetcher import PrefetchingFetcher
 from repro.prefetch.transport import LocalTransport
@@ -82,6 +84,18 @@ class RemoteFetcher:
         self.peer_failures = 0     # fetches abandoned after retries/deadline
 
     def fetch_from(self, peer: int, ids: np.ndarray):
+        with _trace.timed(
+            "remote/fetch",
+            "remote",
+            args={"peer": int(peer), "records": len(ids)}
+            if _trace.enabled()
+            else None,
+        ) as sp:
+            out = self._fetch_from(peer, ids)
+        _metrics.observe("remote/peer_rtt_seconds", sp.duration_s)
+        return out
+
+    def _fetch_from(self, peer: int, ids: np.ndarray):
         ids = np.asarray(ids, np.int64)
         deadline = (
             self._clock() + self.retry.deadline_s

@@ -44,6 +44,8 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.prefetch.cache import TieredCache, copy_records
 from repro.prefetch.scheduler import LookaheadScheduler, batch_key
 from repro.storage.record_store import (
@@ -243,6 +245,15 @@ class PrefetchingFetcher:
             raise
 
     def _execute(self, plan):
+        with _trace.span(
+            "prefetch/execute",
+            "cache",
+            args={"records": int(plan.fetch.size), "epoch": plan.epoch,
+                  "seq": plan.seq} if _trace.enabled() else None,
+        ):
+            self._execute_impl(plan)
+
+    def _execute_impl(self, plan):
         need = plan.fetch
         use_pos = plan.use_pos
         if need.size:
@@ -312,6 +323,12 @@ class PrefetchingFetcher:
 
     # -------------------------------------------------------------- serve
     def __call__(self, indices: np.ndarray):
+        with _trace.timed("prefetch/serve", "cache") as sp:
+            out = self._serve(indices)
+        _metrics.observe("prefetch/batch_assembly_seconds", sp.duration_s)
+        return out
+
+    def _serve(self, indices: np.ndarray):
         idx = np.asarray(indices, np.int64)
         key = batch_key(idx)
         with self._sched_lock:
@@ -342,9 +359,10 @@ class PrefetchingFetcher:
             # this batch's prefetch is queued or running: wait for it
             # rather than issuing a duplicate storage read (timeout =
             # safety valve; the miss path below stays correct regardless)
-            if not ev.wait(timeout=self.plan_wait_s):
-                self.plan_waits_timed_out += 1
-                self.store.stats.account_degraded(1)
+            with _trace.span("prefetch/plan_wait", "cache"):
+                if not ev.wait(timeout=self.plan_wait_s):
+                    self.plan_waits_timed_out += 1
+                    self.store.stats.account_degraded(1)
         out = (
             self._serve_dense(idx, nu, epoch)
             if self.mode == "dense"

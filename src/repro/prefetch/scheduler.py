@@ -42,6 +42,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as _trace
 from repro.prefetch.cache import NEVER, TieredCache
 
 
@@ -297,6 +298,10 @@ class LookaheadScheduler:
     def _top_up(self) -> List[PrefetchPlan]:
         """Admit batches until the window holds ``lookahead`` of them, the
         pin limit is reached, or the stream ends."""
+        with _trace.span("cache/plan", "cache"):
+            return self._top_up_impl()
+
+    def _top_up_impl(self) -> List[PrefetchPlan]:
         plans: List[PrefetchPlan] = []
         limit = self._pin_limit()
         while len(self._window) < self.lookahead:

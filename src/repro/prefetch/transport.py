@@ -39,6 +39,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as _trace
+
 FetchResult = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 
 _REQ_HDR = struct.Struct("<I")
@@ -82,7 +84,14 @@ class LocalTransport:
             cache = self._peers.get(int(peer))
         if cache is None:
             raise OSError(f"peer {peer} not registered")
-        return cache.export_records(ids, release=True)
+        with _trace.span(
+            "remote/serve",
+            "remote",
+            args={"peer": int(peer), "records": len(ids)}
+            if _trace.enabled()
+            else None,
+        ):
+            return cache.export_records(ids, release=True)
 
     def close(self) -> None:
         with self._lock:
@@ -140,19 +149,24 @@ class PeerServer:
                     return
                 (n,) = _REQ_HDR.unpack(hdr)
                 ids = np.frombuffer(_recv_exact(conn, 8 * n), "<i8")
-                found, payload, _, lens = self.cache.export_records(
-                    ids, release=True
-                )
-                frame = b"".join(
-                    (
-                        _RSP_HDR.pack(n),
-                        found.astype(np.uint8).tobytes(),
-                        _U64.pack(payload.nbytes),
-                        lens.astype("<i8").tobytes(),
-                        payload.tobytes(),
+                with _trace.span(
+                    "remote/serve",
+                    "remote",
+                    args={"records": int(n)} if _trace.enabled() else None,
+                ):
+                    found, payload, _, lens = self.cache.export_records(
+                        ids, release=True
                     )
-                )
-                conn.sendall(frame)
+                    frame = b"".join(
+                        (
+                            _RSP_HDR.pack(n),
+                            found.astype(np.uint8).tobytes(),
+                            _U64.pack(payload.nbytes),
+                            lens.astype("<i8").tobytes(),
+                            payload.tobytes(),
+                        )
+                    )
+                    conn.sendall(frame)
         except OSError:
             return
         finally:

@@ -63,6 +63,8 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import trace as _trace
+
 try:  # optional hardware CRC32C; the container usually has only zlib
     from crc32c import crc32c as checksum32  # type: ignore
 
@@ -306,6 +308,12 @@ class FaultInjector:
     def _count(self, name: str, n: int = 1):
         with self._lock:
             setattr(self.log, name, getattr(self.log, name) + n)
+        # every injected fault funnels through here: one instant per
+        # fault marks the injection on the trace timeline, so retries/
+        # hedges in the storage lane line up with their cause
+        if _trace.enabled():
+            _trace.instant("storage/fault_injected", "storage",
+                           args={"kind": name, "n": n})
 
     # -------------------------------------------------------------- seam
     def pread(

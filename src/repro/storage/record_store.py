@@ -63,11 +63,13 @@ import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor
 from concurrent.futures import wait as _futures_wait
-from dataclasses import dataclass, field
-from typing import Iterable, List, NamedTuple, Optional, Sequence, Tuple
+from dataclasses import dataclass, field, fields
+from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from .faults import (
     CHECKSUM_ALGORITHM,
     DEFAULT_RETRY,
@@ -239,6 +241,33 @@ class IOStats:
         Cache-served records are excluded by construction: only records
         that actually reached storage count in ``batch_records``."""
         return self.batch_records / self.batch_ios if self.batch_ios else 0.0
+
+    def snapshot(self) -> Dict[str, int]:
+        """Atomic point-in-time view of every counter.
+
+        Reading fields one by one while producer threads run can observe
+        torn multi-field views (``cache_hit_bytes`` already bumped,
+        ``cache_hits`` not yet) — any derived ratio then lies.  Taking
+        the same lock the writers hold makes the view consistent; this
+        is what benchmarks, the metrics registry, and the drift detector
+        consume."""
+        with self._lock:
+            return {
+                f.name: getattr(self, f.name)
+                for f in fields(self)
+                if not f.name.startswith("_")
+            }
+
+    @staticmethod
+    def delta(new: Dict[str, int], old: Dict[str, int]) -> Dict[str, int]:
+        """Counter difference between two :meth:`snapshot` views — the
+        steady-state window (e.g. warm epochs only) every model check
+        wants.  ``last_offset`` is positional state, not a counter, and
+        is carried over from ``new`` unchanged."""
+        return {
+            k: v - old.get(k, 0) if k != "last_offset" else v
+            for k, v in new.items()
+        }
 
     def reset(self):
         with self._lock:
@@ -656,6 +685,11 @@ class RecordStore:
                 time.sleep(delay)
             r += 1
             self.stats.account_retries(1)
+            if _trace.enabled():
+                _trace.instant(
+                    "storage/retry", "storage",
+                    args={"offset": offset, "attempt": r},
+                )
             try:
                 _pread_full(
                     self._fd, buf, offset, self._injector, self.file_size,
@@ -677,6 +711,11 @@ class RecordStore:
         if (checksum32(view) & 0xFFFFFFFF) == expected:
             return 0
         self.stats.account_checksum_failures(1)
+        if _trace.enabled():
+            _trace.instant(
+                "storage/checksum_failure", "storage",
+                args={"record": rec, "offset": off},
+            )
         try:
             _pread_full(
                 self._fd, view, off, self._injector, self.file_size,
@@ -829,6 +868,7 @@ class RecordStore:
             with self._pool_lock:
                 h = self._pool.submit(fn, list(chunks[i]), hcancel)
             self.stats.account_hedges(1)
+            _trace.instant("storage/hedge", "storage")
             hedged.extend(chunks[i])
             _futures_wait({f, h}, return_when=FIRST_COMPLETED)
             first, other = (f, h) if f.done() else (h, f)
@@ -867,6 +907,25 @@ class RecordStore:
         (e.g. from a :class:`BatchBufferRing`) to skip the output
         allocation in steady state.
         """
+        with _trace.timed(
+            "storage/read_batch",
+            "storage",
+            args={"records": len(indices)} if _trace.enabled() else None,
+        ) as sp:
+            out = self._read_batch_into(
+                indices, out, gap_bytes=gap_bytes, workers=workers
+            )
+        _metrics.observe("storage/pread_batch_seconds", sp.duration_s)
+        return out
+
+    def _read_batch_into(
+        self,
+        indices: Sequence[int],
+        out: Optional[np.ndarray] = None,
+        *,
+        gap_bytes: int = PAGE,
+        workers: int = 1,
+    ) -> np.ndarray:
         if self.variable:
             raise ValueError(
                 "read_batch_into needs fixed-size records; use "
@@ -1013,6 +1072,27 @@ class RecordStore:
         (``ring`` must not also be given), and the returned
         :class:`RaggedBatch` wraps the same buffers.
         """
+        with _trace.timed(
+            "storage/read_ragged",
+            "storage",
+            args={"records": len(indices)} if _trace.enabled() else None,
+        ) as sp:
+            batch = self._read_batch_ragged(
+                indices, gap_bytes=gap_bytes, workers=workers, ring=ring,
+                out=out,
+            )
+        _metrics.observe("storage/pread_batch_seconds", sp.duration_s)
+        return batch
+
+    def _read_batch_ragged(
+        self,
+        indices: Sequence[int],
+        *,
+        gap_bytes: int = PAGE,
+        workers: int = 1,
+        ring: Optional["RaggedBufferRing"] = None,
+        out: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
+    ) -> RaggedBatch:
         idx = np.asarray(indices, dtype=np.int64)
         b = len(idx)
         if b:

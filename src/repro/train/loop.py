@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core.pipeline import InputPipeline
 from repro.core.shuffler import BMFShuffler, LIRSShuffler, TFIPShuffler
+from repro.obs import trace as _trace
 from repro.models.config import ModelConfig
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import AdamW, AdamWConfig
@@ -65,11 +66,14 @@ class Trainer:
         num_producers: int = 1,
         recycle_fn: Optional[Callable] = None,
         batch_iter_fn: Optional[Callable] = None,
+        epoch_hook: Optional[Callable[[int], None]] = None,
     ):
         """``batch_iter_fn`` overrides the default ``shuffler.epoch_batches``
         source — e.g. a ``PrefetchingFetcher.batch_iter``, which re-syncs
         the clairvoyant lookahead window at each epoch boundary while
-        yielding the identical batch sequence."""
+        yielding the identical batch sequence.  ``epoch_hook(epoch)`` fires
+        after each completed epoch — the observability layer uses it to
+        snapshot per-epoch I/O counters for drift detection."""
         self.cfg = cfg
         self.loop_cfg = loop_cfg
         self.optimizer = AdamW(opt_cfg)
@@ -94,6 +98,7 @@ class Trainer:
             if loop_cfg.ckpt_dir
             else None
         )
+        self.epoch_hook = epoch_hook
         self.history: list = []
         self._log_f = open(loop_cfg.log_path, "a") if loop_cfg.log_path else None
 
@@ -122,7 +127,14 @@ class Trainer:
                         continue
                     if lc.fail_at_step >= 0 and self.global_step == lc.fail_at_step:
                         raise PreemptionError(f"simulated preemption @ {self.global_step}")
-                    self.state, metrics = self.step_fn(self.state, batch)
+                    with _trace.span(
+                        "train/step",
+                        "train",
+                        args={"step": self.global_step, "epoch": epoch}
+                        if _trace.enabled()
+                        else None,
+                    ):
+                        self.state, metrics = self.step_fn(self.state, batch)
                     self.global_step += 1
                     step_in_epoch += 1
                     self._log(epoch, metrics)
@@ -130,6 +142,8 @@ class Trainer:
                         self._save(epoch, step_in_epoch)
                     if lc.max_steps and self.global_step >= lc.max_steps:
                         return self.summary()
+                if self.epoch_hook is not None:
+                    self.epoch_hook(epoch)
                 if self.ckpt:
                     self._save(epoch + 1, 0)
         except (KeyboardInterrupt, PreemptionError):
