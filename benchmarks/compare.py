@@ -168,17 +168,23 @@ def _multihost_read_metrics(res: dict) -> Metrics:
         # correctness canaries: any non-zero is a broken tier, not noise
         "headline/byte_mismatches": ("zero", h["byte_mismatches"]),
         "headline/peer_failures": ("zero", h["peer_failures_total"]),
+        "headline/push_errors": ("zero", h.get("push_errors_total", 0)),
         "headline/accounting_imbalances": (
             "zero",
             h["accounting_imbalances"],
         ),
-        # the aggregate-bytes invariant: belady within the epoch-edge
-        # bound of the pigeonhole floor at every host count (the bound
-        # itself — 5% of n — absorbs thread-timing jitter, so per-point
-        # excess bytes are deliberately NOT gated)
+        # the aggregate-bytes invariant: belady fleet storage reads at
+        # the pigeonhole floor *exactly* at every host count — the
+        # consumer-side retention handoff is deterministic in record
+        # counts, so the excess is an integer gated at zero, not a
+        # jitter-tolerant bound
         "headline/invariant_violations": (
             "zero",
             0 if h["aggregate_invariant_ok"] else 1,
+        ),
+        "headline/excess_records_vs_floor": (
+            "zero",
+            int(round(h["max_excess_records_vs_floor"])),
         ),
     }
     for key, p in res["points"].items():
@@ -191,6 +197,39 @@ def _multihost_read_metrics(res: dict) -> Metrics:
     return m
 
 
+def _shuffle_frontier_metrics(res: dict) -> Metrics:
+    h = res["headline"]
+    m: Metrics = {
+        # structural gates: the monotone entropy-vs-I/O chain, the
+        # strategy-agnostic belady floor, the shuffled-beats-sequential
+        # convergence ordering, and the spectrum's endpoints — all
+        # deterministic properties, so any violation is a bug
+        "headline/frontier_violations": ("zero", h["frontier_violations"]),
+        "headline/floor_violations": ("zero", h["floor_violations"]),
+        "headline/model_violations": ("zero", h["model_violations"]),
+        "headline/convergence_inversions": (
+            "zero",
+            h["convergence_inversions"],
+        ),
+        "headline/extreme_violations": ("zero", h["extreme_violations"]),
+        "headline/byte_mismatches": ("zero", h["byte_mismatches"]),
+    }
+    for key, p in res["points"].items():
+        # entropies are deterministic functions of (seed, epoch) streams
+        # — the hit_rate kind's 0.02 absolute slack only papers over
+        # float noise, not real movement
+        m[f"within_batch_entropy/{key}"] = (
+            "hit_rate",
+            p["within_batch_entropy"],
+        )
+        m[f"records_per_io/{key}"] = ("factor", p["records_per_io"])
+        m[f"storage_record_bytes/{key}"] = (
+            "bytes",
+            p["storage_bytes_per_epoch"],
+        )
+    return m
+
+
 EXTRACTORS: Dict[str, Callable[[dict], Metrics]] = {
     "prefetch": _prefetch_metrics,
     "ragged_read": _ragged_read_metrics,
@@ -198,6 +237,7 @@ EXTRACTORS: Dict[str, Callable[[dict], Metrics]] = {
     "fault_overhead": _fault_overhead_metrics,
     "multihost_read": _multihost_read_metrics,
     "obs_overhead": _obs_overhead_metrics,
+    "shuffle_frontier": _shuffle_frontier_metrics,
 }
 
 

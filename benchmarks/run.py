@@ -29,6 +29,7 @@ def main() -> None:
         queue_size,
         ragged_read,
         roofline,
+        shuffle_frontier,
         svm_convergence,
         training_time,
     )
@@ -45,6 +46,7 @@ def main() -> None:
         "ragged_read": ragged_read,             # ragged arena engine (sparse)
         "prefetch": prefetch,                   # clairvoyant prefetch + DRAM tier
         "multihost_read": multihost_read,       # distributed tier aggregate-read invariant
+        "shuffle_frontier": shuffle_frontier,   # strategy spectrum: entropy vs epoch I/O
         "fault_overhead": fault_overhead,       # resilience scaffold cost gate
         "obs_overhead": obs_overhead,           # observability cost gate
         "roofline": roofline,                   # §Roofline (from dry-run)

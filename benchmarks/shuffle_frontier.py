@@ -1,0 +1,427 @@
+"""shuffle_frontier — the shuffle-strategy spectrum's quality-vs-I/O
+trade, measured end to end.
+
+LIRS pays one random read per record for a fully uniform per-epoch
+permutation; a sequential scan (TFIP ``queue_size=1``) is free to read
+and useless to SGD; the block strategies in between (CorgiPile, Corgi²)
+buy randomness in units of their buffer span.  This benchmark walks a
+nested chain along that spectrum —
+
+    seq → CorgiPile(block 256, buffer 2 → 4 → 8 → 16) → LIRS
+
+— and measures, per strategy, the three quantities the trade is made
+of:
+
+* **shuffle quality** (``repro.core.shuffle_quality``): within-batch
+  bucket entropy (the per-step statistical quality SGD sees) and
+  successor-gap entropy (the stream's sequential structure).  Along the
+  chain the buffer span doubles each step, so within-batch entropy must
+  be *strictly increasing* — that monotonicity is the frontier and is
+  gated (``frontier_violations == 0``).
+* **epoch I/O through the clairvoyant tier**: every strategy's stream
+  runs through the real ``PrefetchingFetcher`` + ``TieredCache`` stack
+  (belady, planner on, 25 % DRAM budget).  Storage *records* per epoch
+  sit at the pigeonhole floor ``(1 − c)·n`` for **every** strategy —
+  the tier only needs ``epoch_index_stream``, so clairvoyant retention
+  is strategy-agnostic (gated: ``floor_violations == 0``).  What the
+  spectrum changes is the *shape* of those reads: storage I/Os per
+  epoch grow strictly along the chain (~12 for the scan, ~800 for
+  LIRS at these sizes) as batches scatter over a wider span and stop
+  coalescing.  Measured I/Os are the frontier's cost axis; the
+  ``io_plan`` closed forms price the same epochs per Table-2 device
+  alongside.
+* **SVM convergence** (slow axis): LIBLINEAR-style dual coordinate
+  descent (``repro.svm.dcd``) on a dense synthetic dataset, run
+  block-wise over each strategy's batches.  The sequential scan's final
+  relative objective must be worse than *every* shuffled strategy's
+  (gated: ``convergence_inversions == 0``) — randomness quantized to
+  even a two-block buffer already restores most of the convergence a
+  full shuffle gives, which is the spectrum's reason to exist.
+
+Extremes are gated too: the scan's within-batch entropy is ~0, and
+Corgi² (random scatter at preprocess) matches LIRS's entropy at
+block-sequential read cost — its point sits *off* the chain, below the
+LIRS cost at the same quality, which is the hybrid's whole pitch.
+
+Emits JSON to benchmarks/results/shuffle_frontier.json and harness CSV
+rows; gated by benchmarks/compare.py (nightly job uploads the JSON).
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import Timer, cached
+from repro.core.shuffle_quality import stream_quality
+from repro.core.shuffler import (
+    CorgiPileShuffler,
+    CorgiSquaredShuffler,
+    LIRSShuffler,
+    TFIPShuffler,
+)
+from repro.data.synthetic import decode_dense_batch, make_classification_dataset
+from repro.prefetch.fetcher import PrefetchingFetcher
+from repro.storage.devices import (
+    STORAGE_MODELS,
+    block_cache_hit_model,
+    cache_hit_model,
+)
+from repro.storage.record_store import PAGE, RecordStore, RecordWriter
+from repro.svm.dcd import DCDSolver
+
+N_RECORDS = 8192
+RECORD_BYTES = 256
+BATCH = 512
+GAP = 4 * PAGE
+WORKERS = 2
+LOOKAHEAD = 8
+BUDGET_FRAC = 0.25
+MEASURED_EPOCHS = 2        # after one warm-up epoch
+ENTROPY_EPOCHS = (1, 2)    # steady epochs scored for shuffle quality
+# records/epoch may wobble by a few around the floor when the lookahead
+# window straddles the measurement edge; far below one batch of slack
+FLOOR_TOL_RECORDS = 16
+
+# the nested chain: buffer span doubles each step, so quality and I/O
+# must both climb monotonically — strategy name -> constructor kwargs
+BLOCK = 256
+CHAIN = (
+    ["seq"]
+    + [f"corgi_b{BLOCK}x{buf}" for buf in (2, 4, 8, 16)]
+    + ["lirs"]
+)
+# off-chain points: reported and extreme-gated, not monotone-gated
+EXTRA = ["tfip_q64", f"corgi2_b{BLOCK}x2"]
+
+# SVM convergence axis (dense synthetic, one seed — the ordering gate
+# compares a 2.5x objective gap, far above seed noise)
+SVM_N = 2048
+SVM_DIM = 64
+SVM_BATCH = 256
+SVM_EPOCHS = 8
+SVM_SWEEPS = 4
+SVM_SEED = 1
+SVM_REF_EPOCHS = 3 * SVM_EPOCHS
+
+
+def make_strategy(name: str, num_items: int, batch: int, seed: int):
+    """One registry for both the I/O sweep and the SVM runs, so the two
+    axes describe the same stream generators."""
+    if name == "seq":
+        return TFIPShuffler(num_items, batch, queue_size=1, seed=seed)
+    if name.startswith("tfip_q"):
+        return TFIPShuffler(
+            num_items, batch, queue_size=int(name[len("tfip_q"):]), seed=seed
+        )
+    if name == "lirs":
+        return LIRSShuffler(
+            num_items, batch, seed=seed, avg_instance_bytes=RECORD_BYTES
+        )
+    if name.startswith(("corgi_", "corgi2_")):
+        cls = CorgiSquaredShuffler if name.startswith("corgi2_") else (
+            CorgiPileShuffler
+        )
+        blk, buf = name.split("_b")[1].split("x")
+        return cls(
+            num_items,
+            batch,
+            block_records=int(blk),
+            buffer_blocks=int(buf),
+            seed=seed,
+            avg_instance_bytes=RECORD_BYTES,
+        )
+    raise ValueError(name)
+
+
+def _measure_io(store: RecordStore, sh, budget: int, ref_first: bytes):
+    """One strategy through the real tier: warm-up epoch, then
+    ``MEASURED_EPOCHS`` measured epochs of storage records/I/Os."""
+    fetcher = PrefetchingFetcher(
+        store,
+        sh,
+        budget_bytes=budget,
+        lookahead=LOOKAHEAD,
+        gap_bytes=GAP,
+        workers=WORKERS,
+        policy="belady",
+        planner=True,
+    )
+    warm_first = None
+    for e in range(1 + MEASURED_EPOCHS):
+        if e == 1:
+            fetcher.drain()
+            store.stats.reset()
+        for k, idx in enumerate(fetcher.batch_iter(e)):
+            got = fetcher(idx)
+            if e == 1 and k == 0:
+                # in-stream byte-identity canary (same rule as
+                # benchmarks/multihost_read.py: out-of-stream serves
+                # would desync the lookahead window)
+                warm_first = bytes(np.asarray(got).reshape(-1))
+    fetcher.drain()
+    recs = store.stats.batch_records / MEASURED_EPOCHS
+    ios = store.stats.batch_ios / MEASURED_EPOCHS
+    fetcher.close()
+    return {
+        "storage_records_per_epoch": recs,
+        "storage_ios_per_epoch": ios,
+        "storage_bytes_per_epoch": recs * RECORD_BYTES,
+        "records_per_io": recs / ios if ios else 0.0,
+        "first_batch_identical": warm_first == ref_first,
+    }
+
+
+def _svm_axis(names):
+    """Final relative objective per strategy after ``SVM_EPOCHS`` of
+    block-wise DCD — the convergence end of the frontier."""
+    tmp = tempfile.mkdtemp()
+    meta = make_classification_dataset(
+        f"{tmp}/frontier_svm.rrec", SVM_N, SVM_DIM, sparse=False, seed=0
+    )
+    store = RecordStore(meta.path)
+    xs, ys = decode_dense_batch(store.read_batch_into(range(SVM_N)), SVM_DIM)
+    store.close()
+
+    def run(name: str, epochs: int, seed: int) -> np.ndarray:
+        sh = make_strategy(name, SVM_N, SVM_BATCH, seed)
+        solver = DCDSolver(SVM_DIM, SVM_N)
+        traj = []
+        for e in range(epochs):
+            for blk in sh.epoch_batches(e):
+                solver.solve_block(xs, ys, blk, sweeps=SVM_SWEEPS)
+            traj.append(solver.primal_objective(xs, ys))
+        return np.minimum.accumulate(traj)
+
+    trajs = {name: run(name, SVM_EPOCHS, SVM_SEED) for name in names}
+    ref = run("lirs", SVM_REF_EPOCHS, SVM_SEED + 10)
+    f_star = min(min(t[-1] for t in trajs.values()), ref[-1]) * 0.99999
+    out = {}
+    for name, t in trajs.items():
+        rel = (t - f_star) / abs(f_star)
+        half = next(
+            (i + 1 for i, f in enumerate(rel) if f <= 0.5), SVM_EPOCHS + 1
+        )
+        out[name] = {
+            "svm_rel_final": float(rel[-1]),
+            "svm_epochs_to_half": half,
+            "svm_rel_traj": [float(v) for v in rel],
+        }
+    return out
+
+
+def run(force: bool = False):
+    def compute():
+        tmp = tempfile.mkdtemp()
+        path = f"{tmp}/frontier.rrec"
+        rng = np.random.default_rng(0)
+        with RecordWriter(path, record_size=RECORD_BYTES) as w:
+            payload = rng.integers(
+                0, 256, size=(N_RECORDS, RECORD_BYTES), dtype=np.uint8
+            )
+            for i in range(N_RECORDS):
+                w.append(payload[i].tobytes())
+        store = RecordStore(path)
+        total_bytes = float(N_RECORDS * RECORD_BYTES)
+        budget = int(BUDGET_FRAC * total_bytes)
+        floor = N_RECORDS - int(budget // RECORD_BYTES)
+
+        names = CHAIN + EXTRA
+        svm = _svm_axis(names)
+        out = {
+            "num_records": N_RECORDS,
+            "record_bytes": RECORD_BYTES,
+            "batch": BATCH,
+            "budget_frac": BUDGET_FRAC,
+            "floor_records_per_epoch": floor,
+            "measured_epochs": MEASURED_EPOCHS,
+            "chain": CHAIN,
+            "points": {},
+        }
+        for name in names:
+            sh = make_strategy(name, N_RECORDS, BATCH, seed=1)
+            q = [
+                stream_quality(
+                    sh.epoch_index_stream(e), BATCH, N_RECORDS
+                )
+                for e in ENTROPY_EPOCHS
+            ]
+            # byte-identity reference: this strategy's own first batch,
+            # straight from storage
+            first_idx = next(sh.epoch_batches(1))
+            ref_first = bytes(store.read_batch_into(first_idx).reshape(-1))
+            with Timer() as t:
+                io = _measure_io(store, sh, budget, ref_first)
+            try:
+                plan = sh.io_plan(
+                    total_bytes,
+                    is_sparse=False,
+                    coalesce_gap=GAP,
+                    queue_depth=WORKERS,
+                    cache_budget_bytes=budget,
+                    prefetch_window_bytes=(
+                        LOOKAHEAD * BATCH * RECORD_BYTES
+                    ),
+                    eviction_policy="belady",
+                )
+            except TypeError:  # BMF/TFIP plans take no tier kwargs
+                plan = sh.io_plan(total_bytes, is_sparse=False)
+            # the tier model is policy-shaped, not strategy-shaped:
+            # under belady every once-per-epoch stream hits exactly c
+            # (block_cache_hit_model keeps the pigeonhole form; BMF/TFIP
+            # plans carry no tier pricing, so price them directly)
+            if isinstance(sh, CorgiPileShuffler):
+                model_hit = block_cache_hit_model(
+                    BUDGET_FRAC,
+                    "belady",
+                    block_frac=sh.block_records / N_RECORDS,
+                    span_frac=sh.span_records / N_RECORDS,
+                )
+            else:
+                model_hit = cache_hit_model(BUDGET_FRAC, "belady")
+            measured_hit = (
+                1.0 - io["storage_records_per_epoch"] / N_RECORDS
+            )
+            point = {
+                "on_chain": name in CHAIN,
+                "measured_hit_frac": measured_hit,
+                "model_hit_frac": model_hit,
+                "model_hit_abs_err": abs(measured_hit - model_hit),
+                "within_batch_entropy": float(
+                    np.mean([x["within_batch_entropy"] for x in q])
+                ),
+                "successor_gap_entropy": float(
+                    np.mean([x["successor_gap_entropy"] for x in q])
+                ),
+                **io,
+                "excess_records_vs_floor": (
+                    io["storage_records_per_epoch"] - floor
+                ),
+                # the Timer wraps warm-up + measured epochs end to end
+                "records_per_s": (
+                    (1 + MEASURED_EPOCHS) * N_RECORDS / t.seconds
+                ),
+                "model_cache_hit_fraction": plan.cache_hit_fraction,
+                "modeled_epoch_read_s": {
+                    dev_name: dev.t_epoch_read(plan)
+                    for dev_name, dev in STORAGE_MODELS.items()
+                },
+                "modeled_preprocess_s": {
+                    dev_name: dev.t_preprocess(plan)
+                    for dev_name, dev in STORAGE_MODELS.items()
+                },
+                **svm[name],
+            }
+            out["points"][name] = point
+        store.close()
+
+        pts = out["points"]
+        chain = [pts[n] for n in CHAIN]
+        frontier_violations = sum(
+            not (
+                b["within_batch_entropy"] > a["within_batch_entropy"] + 1e-6
+                and b["storage_ios_per_epoch"]
+                >= a["storage_ios_per_epoch"] * 1.05
+            )
+            for a, b in zip(chain, chain[1:])
+        )
+        shuffled = [n for n in names if n != "seq"]
+        convergence_inversions = sum(
+            pts[n]["svm_rel_final"] >= pts["seq"]["svm_rel_final"]
+            for n in shuffled
+        )
+        corgi2 = pts[f"corgi2_b{BLOCK}x2"]
+        extreme_violations = (
+            int(pts["seq"]["within_batch_entropy"] > 0.02)
+            + int(pts["lirs"]["within_batch_entropy"] < 0.95)
+            + int(
+                abs(
+                    corgi2["within_batch_entropy"]
+                    - pts["lirs"]["within_batch_entropy"]
+                )
+                > 0.02
+            )
+            # the hybrid's pitch: LIRS-grade entropy at below-LIRS I/O
+            + int(
+                corgi2["storage_ios_per_epoch"]
+                >= pts["lirs"]["storage_ios_per_epoch"]
+            )
+        )
+        out["headline"] = {
+            "frontier_violations": frontier_violations,
+            # model-vs-measured I/O: the belady tier model must price
+            # every strategy's storage reads within 2 % absolute
+            "model_violations": sum(
+                p["model_hit_abs_err"] > 0.02 for p in pts.values()
+            ),
+            "max_model_hit_abs_err": max(
+                p["model_hit_abs_err"] for p in pts.values()
+            ),
+            "floor_violations": sum(
+                abs(p["excess_records_vs_floor"]) > FLOOR_TOL_RECORDS
+                for p in pts.values()
+            ),
+            "max_abs_excess_records_vs_floor": max(
+                abs(p["excess_records_vs_floor"]) for p in pts.values()
+            ),
+            "convergence_inversions": convergence_inversions,
+            "extreme_violations": extreme_violations,
+            "byte_mismatches": sum(
+                not p["first_batch_identical"] for p in pts.values()
+            ),
+            "entropy_span": [
+                pts[CHAIN[0]]["within_batch_entropy"],
+                pts[CHAIN[-1]]["within_batch_entropy"],
+            ],
+            "io_span": [
+                pts[CHAIN[0]]["storage_ios_per_epoch"],
+                pts[CHAIN[-1]]["storage_ios_per_epoch"],
+            ],
+            "seq_vs_best_shuffled_rel_final": [
+                pts["seq"]["svm_rel_final"],
+                min(pts[n]["svm_rel_final"] for n in shuffled),
+            ],
+        }
+        return out
+
+    return cached("shuffle_frontier", compute, force)
+
+
+def rows():
+    res = run()
+    out = []
+    for name, p in res["points"].items():
+        out.append(
+            (
+                f"shuffle_frontier/{name}",
+                1e6 / p["records_per_s"],
+                f"wbe={p['within_batch_entropy']:.3f} "
+                f"sge={p['successor_gap_entropy']:.3f} "
+                f"ios/ep={p['storage_ios_per_epoch']:.1f} "
+                f"recs/ep={p['storage_records_per_epoch']:.0f} "
+                f"(floor {res['floor_records_per_epoch']}) "
+                f"svm_rel={p['svm_rel_final']:.3f} "
+                f"identical={p['first_batch_identical']}",
+            )
+        )
+    h = res["headline"]
+    out.append(
+        (
+            "shuffle_frontier/headline",
+            0.0,
+            f"frontier_violations={h['frontier_violations']} "
+            f"floor_violations={h['floor_violations']} "
+            f"convergence_inversions={h['convergence_inversions']} "
+            f"extreme_violations={h['extreme_violations']} "
+            f"entropy {h['entropy_span'][0]:.3f}->"
+            f"{h['entropy_span'][1]:.3f} over ios "
+            f"{h['io_span'][0]:.0f}->{h['io_span'][1]:.0f}",
+        )
+    )
+    return out
+
+
+if __name__ == "__main__":
+    run(force=True)
+    for r in rows():
+        print(",".join(map(str, r)))

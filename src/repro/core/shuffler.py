@@ -15,6 +15,31 @@ BMFShuffler    Block Minimization Framework: one-time physical shuffle into
 TFIPShuffler   TensorFlow input pipeline: sequential reads through a
                bounded shuffle queue of Q instances; randomness limited to
                the queue window.  queue_size=1 ≡ no shuffling.
+
+Block-shuffle spectrum (CorgiPile / Corgi², see PAPERS.md) — partial
+shuffles between TFIP's window and LIRS's full permutation:
+
+CorgiPileShuffler     shuffle *block order* per epoch, read each block
+                      (near-)sequentially, and shuffle record order inside
+                      a bounded buffer of ``buffer_blocks`` blocks.  Blocks
+                      are contiguous runs of the physical layout, so the
+                      per-epoch I/O is block-sequential; DRAM is bounded by
+                      the buffer.  block_records=1, buffer_blocks=1 ≡ a
+                      full per-epoch permutation (the LIRS extreme).
+CorgiSquaredShuffler  Corgi²'s hybrid: a one-time offline block *scatter*
+                      (each block is a random subset, physically rewritten
+                      contiguous — priced exactly like BMF's
+                      pre-processing), then CorgiPile-style online
+                      shuffling over the scattered blocks.  Per-epoch cost
+                      equals CorgiPile's; within-batch randomness
+                      approaches LIRS's because block contents are spread
+                      uniformly over the id space.
+
+Both expose the same ``epoch_index_stream(epoch)`` / ``epoch_batches`` /
+``io_plan()`` contract as LIRS: their streams are fully deterministic
+given (seed, epoch), so the clairvoyant machinery — LookaheadScheduler,
+the admission planner, Belady eviction, multi-host placement — works
+unchanged on top of them.
 """
 from __future__ import annotations
 
@@ -24,7 +49,7 @@ from typing import Iterator, List, Optional, Sequence
 import numpy as np
 
 from repro.core.assignment import FeistelAssignment, TableAssignment
-from repro.storage.devices import cache_hit_model
+from repro.storage.devices import block_cache_hit_model, cache_hit_model
 
 
 @dataclasses.dataclass
@@ -336,3 +361,249 @@ class TFIPShuffler:
             preprocess_rand_write_bytes=total_bytes,
             epoch_seq_read_bytes=total_bytes,
         )
+
+
+class CorgiPileShuffler:
+    """Block + buffer shuffle (CorgiPile): per-epoch shuffled *block
+    order*, records shuffled only inside a sliding buffer of
+    ``buffer_blocks`` blocks.
+
+    Blocks are contiguous runs of the physical record layout
+    (``array_split`` of ``arange``), so an epoch reads the file as
+    ``num_blocks`` near-sequential segments in random order — the I/O is
+    block-sequential while DRAM stays bounded by the buffer.  The stream
+    for every epoch is a deterministic function of ``(seed, epoch)``,
+    which is all the clairvoyant tier needs: ``LookaheadScheduler``,
+    the admission planner, Belady eviction and multi-host placement
+    consume ``epoch_index_stream`` exactly as they do for LIRS.
+
+    Extremes: ``block_records = buffer_blocks = 1`` degenerates to a full
+    per-epoch permutation (every record is its own block, block order is
+    the permutation — the LIRS limit); one block spanning the dataset
+    with ``buffer_blocks = 1`` also yields a full shuffle (the buffer is
+    the dataset).  In between, randomness is quantized to the buffer
+    span ``buffer_blocks · block_records``.
+    """
+
+    def __init__(
+        self,
+        num_items: int,
+        batch_size: int,
+        block_records: int,
+        buffer_blocks: int = 2,
+        seed: int = 0,
+        avg_instance_bytes: float = 0.0,
+    ):
+        if num_items <= 0:
+            raise ValueError("num_items must be positive")
+        self.num_items = num_items
+        self.batch_size = batch_size
+        self.block_records = max(1, min(int(block_records), num_items))
+        self.buffer_blocks = max(1, int(buffer_blocks))
+        self.num_blocks = -(-num_items // self.block_records)
+        self.seed = seed
+        self.avg_instance_bytes = avg_instance_bytes
+        self.blocks = self._make_blocks()
+        self._stream_cache: dict = {}
+
+    def _make_blocks(self) -> List[np.ndarray]:
+        # contiguous physical runs: reading one is (near-)sequential
+        return np.array_split(
+            np.arange(self.num_items, dtype=np.int64), self.num_blocks
+        )
+
+    def _epoch_rng_key(self, epoch: int):
+        return (self.seed, 0xC09, epoch)
+
+    @property
+    def span_records(self) -> float:
+        """Mean records resident in the shuffle buffer (the randomness
+        window): ``buffer_blocks`` blocks of mean size n / num_blocks."""
+        return min(
+            float(self.num_items),
+            self.buffer_blocks * self.num_items / self.num_blocks,
+        )
+
+    def epoch_index_stream(self, epoch: int) -> np.ndarray:
+        """Full epoch access sequence, known up front.
+
+        Shuffled block order, then a full shuffle *within* each group of
+        ``buffer_blocks`` consecutive blocks — the bounded-buffer
+        semantics of CorgiPile's tuple-level shuffle, made deterministic
+        per (seed, epoch) so prefetch clairvoyance survives.
+        """
+        cached = self._stream_cache.get(epoch)
+        if cached is not None:
+            return cached
+        rng = np.random.default_rng(self._epoch_rng_key(epoch))
+        order = rng.permutation(self.num_blocks)
+        out = np.empty(self.num_items, dtype=np.int64)
+        w = 0
+        for g in range(0, self.num_blocks, self.buffer_blocks):
+            buf = np.concatenate(
+                [self.blocks[int(b)] for b in order[g : g + self.buffer_blocks]]
+            )
+            rng.shuffle(buf)
+            out[w : w + len(buf)] = buf
+            w += len(buf)
+        if len(self._stream_cache) >= 4:
+            self._stream_cache.pop(next(iter(self._stream_cache)))
+        self._stream_cache[epoch] = out
+        return out
+
+    def epoch_batches(self, epoch: int) -> Iterator[np.ndarray]:
+        stream = self.epoch_index_stream(epoch)
+        for i in range(0, self.num_items - self.batch_size + 1, self.batch_size):
+            yield stream[i : i + self.batch_size]
+        rem = self.num_items % self.batch_size
+        if rem:
+            yield stream[self.num_items - rem :]
+
+    def io_plan(
+        self,
+        total_bytes: float,
+        is_sparse: bool,
+        coalesce_gap: float = 0.0,
+        queue_depth: float = 1.0,
+        cache_budget_bytes: float = 0.0,
+        prefetch_window_bytes: float = 0.0,
+        eviction_policy: str = "lru",
+    ) -> IOPlan:
+        """Price an epoch of the block stream.
+
+        Two strategy-specific corrections over the LIRS plan:
+
+        * **Coalescing is span-local.**  A batch of ``B`` records is
+          drawn from the current buffer span ``S`` (not from all ``n``),
+          so sorted-batch neighbour spacing is geometric with density
+          ``B/S`` — dense enough that the batch engine's gap-merge folds
+          each batch into a handful of near-sequential extent reads.
+          The plan prices that by evaluating
+          :func:`expected_coalescing_factor` with the *span* as the
+          population; ``span → n`` recovers the LIRS pricing, a 1-record
+          span prices one seek per record.
+        * **The DRAM-tier hit rate uses the block-corrected form.**
+          Same-block records co-travel every epoch and same-buffer
+          records co-travel within one, which breaks the uniform-
+          permutation assumption behind ``lru_hit_fraction`` —
+          :func:`repro.storage.devices.block_cache_hit_model` carries
+          the first-order correction (Belady stays ``hit = c`` exactly:
+          the pigeonhole argument only needs once-per-epoch streams).
+        """
+        plan = IOPlan()
+        plan.mean_record_bytes = self.avg_instance_bytes
+        plan.eviction_policy = eviction_policy
+        if is_sparse:  # offset-table scan (Fig 7b)
+            plan.preprocess_seq_read_bytes = total_bytes
+        hit = 0.0
+        if cache_budget_bytes > 0 and total_bytes > 0:
+            c = min(1.0, cache_budget_bytes / total_bytes)
+            lam = (
+                min(prefetch_window_bytes, cache_budget_bytes, total_bytes)
+                / total_bytes
+            )
+            hit = block_cache_hit_model(
+                c,
+                eviction_policy,
+                block_frac=self.block_records / self.num_items,
+                span_frac=self.span_records / self.num_items,
+                window_frac=lam,
+            )
+        plan.cache_hit_fraction = hit
+        n_ios = float(self.num_items)
+        if self.avg_instance_bytes > 0:
+            gap_records = max(0.0, coalesce_gap) / self.avg_instance_bytes
+            span = max(1, int(round(self.span_records)))
+            b_eff = max(1.0, self.batch_size * (1.0 - hit))
+            plan.coalescing_factor = expected_coalescing_factor(
+                span, int(min(b_eff, span)), gap_records
+            )
+            n_ios = n_ios / plan.coalescing_factor
+        plan.queue_depth = max(1.0, queue_depth)
+        plan.epoch_rand_read_ios = n_ios
+        plan.epoch_rand_read_bytes = total_bytes
+        return plan
+
+
+class CorgiSquaredShuffler(CorgiPileShuffler):
+    """Corgi²'s hybrid offline–online shuffle.
+
+    Offline, once: partition records into blocks *at random* (each block
+    a uniform subset, not a contiguous run) and physically rewrite the
+    file so each block's members land contiguous — the same full
+    read + random write-back pass BMF prices as pre-processing.  Online,
+    per epoch: CorgiPile over the scattered blocks (shuffled block order,
+    buffer-bounded record shuffle).
+
+    The per-epoch I/O shape and cost equal CorgiPile's (blocks are
+    contiguous *after* the rewrite), but because block membership is
+    uniform over the id space, a batch is statistically close to a
+    uniform sample — within-batch randomness approaches LIRS's at
+    block-sequential read cost.  What remains limited is *cross-epoch*
+    decorrelation: same-block records travel together in every epoch,
+    which is exactly the ``block_frac`` term of the block-corrected
+    cache model.
+
+    ``physical_order()`` gives the rewritten layout (block concatenation)
+    so a harness measuring real I/O can materialize the scattered store;
+    ``epoch_index_stream`` stays in *logical* record ids.
+    """
+
+    def __init__(
+        self,
+        num_items: int,
+        batch_size: int,
+        block_records: int,
+        buffer_blocks: int = 2,
+        seed: int = 0,
+        avg_instance_bytes: float = 0.0,
+    ):
+        super().__init__(
+            num_items,
+            batch_size,
+            block_records,
+            buffer_blocks,
+            seed,
+            avg_instance_bytes,
+        )
+
+    def _make_blocks(self) -> List[np.ndarray]:
+        # the one-time offline scatter: a fixed random partition, then a
+        # physical rewrite makes each block contiguous (priced in io_plan)
+        rng = np.random.default_rng((self.seed, 0xC52))
+        scatter = rng.permutation(self.num_items).astype(np.int64)
+        return np.array_split(scatter, self.num_blocks)
+
+    def _epoch_rng_key(self, epoch: int):
+        return (self.seed, 0xC52, epoch + 1)
+
+    def physical_order(self) -> np.ndarray:
+        """Record ids in rewritten-file order (offline scatter output)."""
+        return np.concatenate(self.blocks)
+
+    def io_plan(
+        self,
+        total_bytes: float,
+        is_sparse: bool,
+        coalesce_gap: float = 0.0,
+        queue_depth: float = 1.0,
+        cache_budget_bytes: float = 0.0,
+        prefetch_window_bytes: float = 0.0,
+        eviction_policy: str = "lru",
+    ) -> IOPlan:
+        plan = super().io_plan(
+            total_bytes,
+            is_sparse,
+            coalesce_gap,
+            queue_depth,
+            cache_budget_bytes,
+            prefetch_window_bytes,
+            eviction_policy,
+        )
+        # offline scatter pass, priced like BMF's pre-processing (Fig 7a):
+        # read everything once sequentially, write it back in scattered
+        # block order with random I/O.  Dominates is_sparse's offset scan.
+        plan.preprocess_seq_read_bytes = total_bytes
+        plan.preprocess_rand_write_ios = float(self.num_items)
+        plan.preprocess_rand_write_bytes = total_bytes
+        return plan

@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.train --arch minitron-8b --smoke \
         --steps 200 --shuffler lirs --ckpt-dir /tmp/ck
 
-Wires: synthetic token corpus in a RecordStore → LIRS/BMF/TFIP shuffler →
+Wires: synthetic token corpus in a RecordStore → shuffle strategy (LIRS /
+BMF / TFIP / CorgiPile / Corgi²) →
 prefetching pipeline → jitted train step → checkpoints + Eq. 1 report.
 On a multi-device host it shards the batch over a ("data","model") mesh;
 on this CPU box it runs single-device with identical code paths.
@@ -34,7 +35,14 @@ def build_argparser():
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--steps", type=int, default=0, help="cap total steps")
     ap.add_argument("--shuffler", default="lirs",
-                    choices=["lirs", "lirs_page", "bmf", "tfip"])
+                    choices=["lirs", "lirs_page", "bmf", "tfip",
+                             "corgipile", "corgi2"])
+    ap.add_argument("--shuffle-block-records", type=int, default=0,
+                    help="block size (records) for corgipile/corgi2; "
+                         "0 = batch//2")
+    ap.add_argument("--shuffle-buffer-blocks", type=int, default=2,
+                    help="shuffle-buffer span in blocks for "
+                         "corgipile/corgi2")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--resume", action="store_true")
@@ -124,9 +132,16 @@ def main(argv=None):
     )
     seq = args.seq_len
 
+    shuffle_kw = {}
+    if args.shuffler == "lirs_page":
+        shuffle_kw["page_groups"] = store.page_groups()
+    elif args.shuffler in ("corgipile", "corgi2"):
+        if args.shuffle_block_records > 0:
+            shuffle_kw["block_records"] = args.shuffle_block_records
+        shuffle_kw["buffer_blocks"] = args.shuffle_buffer_blocks
     shuffler = make_shuffler(
         args.shuffler, store.num_records, args.batch, seed=args.seed,
-        **({"page_groups": store.page_groups()} if args.shuffler == "lirs_page" else {}),
+        **shuffle_kw,
     )
 
     fetcher = None
@@ -310,6 +325,7 @@ def main(argv=None):
                 epochs=steady_epochs,
                 remote_hits=d["remote_hits"],
                 storage_records=d["storage_records"],
+                local_hits=d["local_hits"],
             )
         else:
             d = IOStats.delta(last, first)

@@ -222,7 +222,7 @@ class TieredCache:
 
     # ---------------------------------------------------------- admission
     def _admission_locked(
-        self, nu: Optional[np.ndarray], need: int
+        self, nu: Optional[np.ndarray], need: int, free_only: bool = False
     ) -> np.ndarray:
         """Mask over ``need`` insert candidates (non-resident, slot-sized,
         deduplicated): which ones an admission-filtered insert retains.
@@ -240,6 +240,14 @@ class TieredCache:
         no ``nu``) admission is a capacity check only: first
         ``free + evictable`` candidates, same acceptance order as an
         unfiltered insert, just *decided* instead of ``rejected``.
+
+        ``free_only=True`` disables the exchange: candidates take free
+        slots (dead ``NEVER`` residents included under belady) and the
+        rest decline — never displacing a live resident.  This is the
+        retention-push drain's mode: every pushed record is a placement
+        winner, so an exchange would evict one winner for another — pure
+        loss — whereas declining lets the requeue retry once the
+        receiver's own departures free the slot.
         """
         free = len(self._free)
         occupied = self._id_of[self._id_of >= 0]
@@ -249,14 +257,27 @@ class TieredCache:
         if room == 0 or need == 0:
             return take
         if self.policy != "belady" or nu is None:
-            take[: min(need, room)] = True
+            take[: min(need, free if free_only else room)] = True
             return take
+        # evictable residents with no known future use are as good as
+        # free slots: NEVER means "never asked of this tier again" (a
+        # consumed record whose predicted next holder is another host, or
+        # none), so a candidate may take the slot without the strict
+        # sooner-than exchange — in particular a NEVER candidate (a
+        # window prefetch with no retention merit) recycles a dead slot
+        # instead of being declined by the NEVER-vs-NEVER tie, which
+        # would turn the whole prefetch window into demand reads
+        dead = int((self.next_use[evictable] == NEVER).sum())
+        free += dead
+        if free_only:
+            room = free
         order = np.argsort(nu, kind="stable")  # soonest next use first
         k = min(need, room)
         cand = order[:k]
         n_beyond = k - free
         if n_beyond > 0:
-            worst = np.sort(self.next_use[evictable])[::-1][:n_beyond]
+            live = np.sort(self.next_use[evictable])
+            worst = live[live < NEVER][::-1][:n_beyond]
             cand = np.concatenate(
                 (cand[:free], cand[free:][nu[cand[free:]] < worst])
             )
@@ -330,9 +351,14 @@ class TieredCache:
         src_off: np.ndarray,
         next_use: Optional[np.ndarray] = None,
         filtered: bool = False,
+        with_bytes: bool = False,
+        free_only: bool = False,
     ) -> int:
         """Copy records into the cache from a flat uint8 source (a batch
-        arena or dense buffer); returns how many were newly inserted.
+        arena or dense buffer); returns how many were newly inserted
+        (with ``with_bytes=True``, the ``(count, payload_bytes)`` pair —
+        the prefetch path's fill accounting needs the exact bytes of the
+        *newly inserted* subset, which only this lock can attribute).
 
         Already-resident ids are skipped (idempotent under the demand /
         prefetch race), records wider than a slot are rejected, and when
@@ -345,11 +371,20 @@ class TieredCache:
         ``rejected`` — by construction the admitted set always fits), and
         ``next_use`` (aligned with ``ids``) both drives the belady
         exchange and freshens the admitted records' eviction priorities.
+        ``free_only=True`` (with ``filtered``) admits into free capacity
+        only — see :meth:`_admission_locked`.
         """
+        k, nbytes = self._insert_impl(
+            ids, src, src_off, next_use, filtered, free_only
+        )
+        return (k, nbytes) if with_bytes else k
+
+    def _insert_impl(self, ids, src, src_off, next_use, filtered,
+                     free_only=False):
         ids = np.asarray(ids, np.int64)
         src_off = np.asarray(src_off, np.int64)
         if len(ids) == 0 or self.capacity == 0:
-            return 0
+            return 0, 0
         if next_use is not None:
             next_use = np.asarray(next_use, np.int64)
         with _trace.span("cache/insert", "cache"), self._lock:
@@ -361,13 +396,13 @@ class TieredCache:
             nu = next_use[first] if next_use is not None else None
             need = len(uniq)
             if need == 0:
-                return 0
+                return 0, 0
             if nu is not None:
                 # clairvoyant truth for the exchange below and for later
                 # evictions; harmless for candidates that end up declined
                 self.next_use[uniq] = nu
             if filtered:
-                take = self._admission_locked(nu, need)
+                take = self._admission_locked(nu, need, free_only)
                 k = int(take.sum())
                 if k < need:
                     self.planned_skips += need - k
@@ -375,7 +410,7 @@ class TieredCache:
                     uniq, first, lens = uniq[take], first[take], lens[take]
                     need = k
                 if need == 0:
-                    return 0
+                    return 0, 0
             if need > len(self._free):
                 self._evict_locked(need - len(self._free))
             k = min(need, len(self._free))
@@ -383,19 +418,20 @@ class TieredCache:
                 self.rejected += need - k
                 uniq, first, lens = uniq[:k], first[:k], lens[:k]
             if k == 0:
-                return 0
+                return 0, 0
             slots = np.asarray(self._free[-k:], np.int64)
             del self._free[-k:]
             copy_records(
                 src, src_off[first], self._arena, slots * self.slot_bytes, lens
             )
+            inserted_bytes = int(lens.sum())
             self._slot_of[uniq] = slots
             self._id_of[slots] = uniq
-            self._used_bytes += int(lens.sum())
+            self._used_bytes += inserted_bytes
             self._tick += 1
             self._last_used[uniq] = self._tick
             self.insertions += k
-            return k
+            return k, inserted_bytes
 
     def _evict_locked(self, m: int):
         """Drop up to ``m`` unpinned residents: the oldest ticks under

@@ -82,6 +82,7 @@ class RemoteFetcher:
         self.remote_misses = 0     # asked, peer answered "not resident"
         self.peer_errors = 0       # transport attempts that raised
         self.peer_failures = 0     # fetches abandoned after retries/deadline
+        self.pushed = 0            # records handed to a peer's inbox
 
     def fetch_from(self, peer: int, ids: np.ndarray):
         with _trace.timed(
@@ -133,6 +134,31 @@ class RemoteFetcher:
             np.empty(0, np.int64),
         )
 
+    def push_to(
+        self, peer: int, ids, payload, offsets, lengths, next_use
+    ) -> int:
+        """Retention handoff to ``peer``'s inbox (consumer-side
+        placement).  One attempt, no retry: a lost push degrades to one
+        storage read on the receiver next epoch, which is cheaper than
+        stalling the serve path here.  ``OSError`` propagates (counted)
+        so the caller can tally the loss."""
+        with _trace.timed(
+            "remote/push_send",
+            "remote",
+            args={"peer": int(peer), "records": len(ids)}
+            if _trace.enabled()
+            else None,
+        ):
+            try:
+                n = self.transport.push(
+                    peer, ids, payload, offsets, lengths, next_use
+                )
+            except OSError:
+                self.peer_errors += 1
+                raise
+        self.pushed += int(n)
+        return int(n)
+
 
 class RemoteTier:
     """Consumer-side routing for the cross-host tier.
@@ -179,6 +205,12 @@ class RemoteTier:
             )
             if found.any():
                 yield sel[found], payload, offsets, lens
+
+    def push(self, peer: int, ids, payload, offsets, lengths, next_use) -> int:
+        """Retention handoff: deliver records to ``peer``'s inbox."""
+        return self.fetcher.push_to(
+            int(peer), ids, payload, offsets, lengths, next_use
+        )
 
 
 @dataclass
@@ -246,17 +278,33 @@ class Cluster:
 
     def aggregate_io(self) -> Dict[str, int]:
         """Fleet-wide counter sums — the quantities the invariant and the
-        models are checked against."""
+        models are checked against.
+
+        ``local_hits`` is the *cross-epoch* local tier: demand-time DRAM
+        gathers minus the same-window prefetch fills that produced them
+        (``peer_refills`` + ``prefetch_fills``, counted at the insert
+        source).  A peer-served record is inserted into the consumer's
+        cache and then gathered from it, so raw ``cache_hits`` counts the
+        remote tier a second time; the source counters make the
+        local/remote/storage split match ``distributed_hit_model``
+        directly instead of deriving local as ``total − remote −
+        storage``."""
         out = {
             "storage_records": 0,
             "storage_bytes": 0,
             "storage_ios": 0,
             "local_hits": 0,
             "local_hit_bytes": 0,
+            "demand_gathers": 0,
+            "peer_refills": 0,
+            "prefetch_fills": 0,
             "remote_hits": 0,
             "remote_hit_bytes": 0,
             "remote_served": 0,
             "remote_served_bytes": 0,
+            "peer_pushes": 0,
+            "push_errors": 0,
+            "staged_records": 0,
             "peer_errors": 0,
             "peer_failures": 0,
             "retries": 0,
@@ -267,12 +315,20 @@ class Cluster:
             out["storage_records"] += s.batch_records
             out["storage_bytes"] += s.bytes_read
             out["storage_ios"] += s.batch_ios
-            out["local_hits"] += s.cache_hits
-            out["local_hit_bytes"] += s.cache_hit_bytes
+            out["local_hits"] += s.cache_hits - s.peer_refills - s.prefetch_fills
+            out["local_hit_bytes"] += (
+                s.cache_hit_bytes - s.peer_refill_bytes - s.prefetch_fill_bytes
+            )
+            out["demand_gathers"] += s.cache_hits
+            out["peer_refills"] += s.peer_refills
+            out["prefetch_fills"] += s.prefetch_fills
             out["remote_hits"] += s.remote_hits
             out["remote_hit_bytes"] += s.remote_hit_bytes
             out["remote_served"] += node.cache.remote_served
             out["remote_served_bytes"] += node.cache.remote_served_bytes
+            out["peer_pushes"] += node.fetcher.pushed_records
+            out["push_errors"] += node.fetcher.push_errors
+            out["staged_records"] += node.fetcher.staged_records
             out["peer_errors"] += node.remote.fetcher.peer_errors
             out["peer_failures"] += node.remote.fetcher.peer_failures
             out["retries"] += s.retries
@@ -414,6 +470,10 @@ def make_cluster(
             remote=remote if num_hosts > 1 else None,
             placement=placement if num_hosts > 1 else None,
         )
+        if num_hosts > 1:
+            # retention pushes land in the receiver's inbox and are
+            # drained between its batches — never inserted mid-serve
+            transport.register_inbox(h, fetcher._inbox_put)
         nodes.append(HostNode(h, stores[h], view, caches[h], remote, fetcher))
     return Cluster(nodes, placement, transport)
 

@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
-from repro.prefetch.cache import TieredCache, copy_records
+from repro.prefetch.cache import NEVER, TieredCache, copy_records
 from repro.prefetch.scheduler import LookaheadScheduler, batch_key
 from repro.storage.record_store import (
     PAGE,
@@ -139,6 +139,41 @@ class PrefetchingFetcher:
         # demand-time misses the cross-host tier served
         self.prefetch_remote_records = 0
         self.demand_remote_records = 0
+        # peer-routed plan-time misses handed to the demand path instead
+        # of storage (the holder hadn't consumed them yet — epoch-edge
+        # window race; see _execute_impl)
+        self.peer_deferred = 0
+        # window staging (placement-routed belady tiers): plan records
+        # with no retention merit on this host are read into a
+        # batch-lifetime side buffer instead of the cache, so the pinned
+        # prefetch window never squeezes placement-predicted retention
+        # out of the tier.  Keyed by batch fingerprint; entries are
+        # popped at serve.  The bytes live *outside* the cache budget —
+        # the separate window slice ``IOPlan.prefetch_window_bytes``
+        # models — and are bounded by the scheduler's pin limit
+        # (``capacity // 2`` records, i.e. at most half the budget).
+        self._staged: dict = {}
+        self._stage_lock = threading.Lock()
+        self.staged_records = 0   # records served from the staging buffer
+        # consumer-side retention (placement-routed belady tier): after a
+        # batch is served, each consumed record's bytes are *pushed* to
+        # its placement-predicted next-epoch holder — a peer's inbox via
+        # the transport, or this host's own.  The receiver banks pushes
+        # here and drains them into its cache between batches (after the
+        # previous batch retired, so departures always precede arrivals
+        # and the feasible occupancy trajectory is preserved).  Entries
+        # that the cache declines (transient within-step squeeze) are
+        # requeued and retried at the next drain.
+        self._push_on = self.scheduler._stage_floor and remote is not None
+        if not self._push_on:
+            # staging and push-retention are one mechanism: without a
+            # transport to carry the handoff, fall back to plan-time
+            # admission-filtered inserts (the single-host belady path)
+            self.scheduler._stage_floor = False
+        self._inbox: list = []
+        self._inbox_lock = threading.Lock()
+        self.pushed_records = 0   # records handed to a next-epoch holder
+        self.push_errors = 0      # push attempts that raised (peer down)
         # records the pre-read admission probe trimmed from in-flight
         # plans (state drifted since plan time); their final — and only
         # counted — admission decision happens at the demand insert
@@ -156,7 +191,13 @@ class PrefetchingFetcher:
         """Drop-in ``batch_iter_fn``: re-syncs the lookahead window to
         ``(epoch, 0)`` then yields the shuffler's batches unchanged."""
         with self._sched_lock:
-            self._dispatch(self.scheduler.start_epoch(epoch))
+            sc = self.scheduler
+            if self._staged and not (sc.primed and sc.head == (epoch, 0)):
+                # the window is about to reset (abandoned epoch / replay):
+                # staged bytes belong to discarded batches — drop them
+                with self._stage_lock:
+                    self._staged.clear()
+            self._dispatch(sc.start_epoch(epoch))
         yield from self.shuffler.epoch_batches(epoch)
 
     def _dispatch(self, plans):
@@ -216,6 +257,8 @@ class PrefetchingFetcher:
                         self.plans_failed += 1
                         if plan.fetch.size:
                             self.cache.invalidate(plan.fetch)
+                        with self._stage_lock:
+                            self._staged.pop(batch_key(plan.batch), None)
                         self.store.stats.account_degraded(1)
                     finally:
                         with self._sched_lock:
@@ -237,6 +280,8 @@ class PrefetchingFetcher:
                     self.cache.invalidate(plan.fetch)
             except Exception:  # noqa: BLE001 - best-effort cleanup
                 pass
+            with self._stage_lock:
+                self._staged.clear()
             with self._sched_lock:
                 pending = list(self._plan_done.values())
                 self._plan_done.clear()
@@ -253,9 +298,113 @@ class PrefetchingFetcher:
         ):
             self._execute_impl(plan)
 
+    # ------------------------------------------------- retention handoff
+    def _inbox_put(
+        self, ids, payload, offsets, lengths, next_use, from_peer=True
+    ) -> int:
+        """Bank a retention push (transport delivery target).  Returns
+        the record count; admission happens at drain time."""
+        entry = (
+            np.asarray(ids, np.int64),
+            payload,
+            np.asarray(offsets, np.int64),
+            np.asarray(lengths, np.int64),
+            np.asarray(next_use, np.int64),
+            bool(from_peer),
+        )
+        with self._inbox_lock:
+            self._inbox.append(entry)
+        return len(entry[0])
+
+    def _drain_inbox(self):
+        """Insert banked pushes into the cache.  Runs at the top of every
+        serve — after the previous batch retired, so the slots its dead
+        (``NEVER``-priced) residents freed are available.  Declined
+        records (a within-step squeeze: a peer pushed before this host's
+        own departures retired) are requeued for the next drain."""
+        with self._inbox_lock:
+            if not self._inbox:
+                return
+            entries, self._inbox = self._inbox, []
+        requeue = []
+        for ids, payload, offs, lens, nu, from_peer in entries:
+            # free_only: a pushed record is a placement winner; an
+            # admission *exchange* here would evict one winner to admit
+            # another — a guaranteed storage read either way.  Decline
+            # instead and retry once this host's departures free slots.
+            ins, ib = self.cache.insert(
+                ids, payload, offs, next_use=nu, filtered=True,
+                with_bytes=True, free_only=True,
+            )
+            if from_peer:
+                # receiver-side transfer accounting: a banked push is the
+                # cross-host tier serving this record's next-epoch use
+                self.store.stats.account_peer_refills(ins, ib)
+                self.store.stats.account_remote_hits(ins, ib)
+            if ins < len(ids):
+                left = ~self.cache.resident(ids)
+                if left.any():
+                    requeue.append(
+                        (ids[left], payload, offs[left], lens[left],
+                         nu[left], from_peer)
+                    )
+        if requeue:
+            with self._inbox_lock:
+                self._inbox = requeue + self._inbox
+
+    def _push_retained(self, idx, src, src_off, lens, spec):
+        """Hand each just-consumed record to its predicted next-epoch
+        holder: peers via the transport, this host via its own inbox.
+        Rows are copied into a fresh arena — the serve buffer may be a
+        reusable ring slot."""
+        hold, pos = spec
+        for g in np.unique(hold):
+            if g < 0:
+                continue
+            rows = np.flatnonzero(hold == g)
+            ids = idx[rows]
+            rl = lens[rows]
+            offs = np.zeros(len(rl), np.int64)
+            if len(rl) > 1:
+                np.cumsum(rl[:-1], out=offs[1:])
+            arena = np.empty(int(rl.sum()), np.uint8)
+            copy_records(src, src_off[rows], arena, offs, rl)
+            try:
+                if g == getattr(self.shuffler, "host_id", None):
+                    self._inbox_put(
+                        ids, arena, offs, rl, pos[rows], from_peer=False
+                    )
+                else:
+                    self.remote.push(g, ids, arena, offs, rl, pos[rows])
+                self.pushed_records += len(ids)
+            except OSError:
+                # a lost push costs the receiver one storage read next
+                # epoch — degradation, never corruption
+                self.push_errors += 1
+
+    def _stage_put(self, key, ids, payload, offs):
+        """File staged bytes for a batch: served by :meth:`_staged_into`
+        at demand time, outside the cache tier."""
+        entry = (
+            np.asarray(ids, np.int64),
+            payload,
+            np.asarray(offs, np.int64),
+        )
+        with self._stage_lock:
+            self._staged.setdefault(key, []).append(entry)
+
     def _execute_impl(self, plan):
         need = plan.fetch
         use_pos = plan.use_pos
+        peer = plan.peer
+        key = batch_key(plan.batch)
+        # placement-routed belady tier: every plan read bypasses the
+        # cache and is staged for its one window use — retention happens
+        # at retirement via the push handoff, so the tier's occupancy
+        # follows the placement's feasible trajectory instead of
+        # absorbing the pinned window
+        staging = self.scheduler._stage_floor
+        stage = None
         if need.size:
             # re-check residency at execution time: the demand path may
             # have read (and inserted) these records while the plan sat
@@ -264,6 +413,10 @@ class PrefetchingFetcher:
             need = need[alive]
             if use_pos is not None:
                 use_pos = use_pos[alive]
+            if peer is not None:
+                peer = peer[alive]
+        if need.size and staging:
+            stage = np.ones(len(need), bool)
         if need.size and self.planner:
             # admission probe *before* the read: a record the cache would
             # decline (plan-time occupancy drifted — demand inserts landed
@@ -273,36 +426,63 @@ class PrefetchingFetcher:
             # Counted here (not in cache.planned_skips): the demand
             # path's own filtered insert will run — and count — the
             # final admission decision for these records exactly once.
-            ok = self.cache.admit(need, next_use=use_pos)
-            if not ok.all():
-                skipped = need[~ok]
-                self.probe_skips += len(skipped)
-                self.probe_skip_bytes += int(
-                    self.cache.record_lengths[skipped].sum()
+            # Staged records skip the probe: they never enter the cache.
+            pr = (
+                np.flatnonzero(~stage)
+                if stage is not None
+                else np.arange(len(need), dtype=np.int64)
+            )
+            if len(pr):
+                ok = self.cache.admit(
+                    need[pr],
+                    next_use=use_pos[pr] if use_pos is not None else None,
                 )
-                need = need[ok]
-                if use_pos is not None:
-                    use_pos = use_pos[ok]
+                if not ok.all():
+                    skipped = need[pr[~ok]]
+                    self.probe_skips += len(skipped)
+                    self.probe_skip_bytes += int(
+                        self.cache.record_lengths[skipped].sum()
+                    )
+                    keep = np.ones(len(need), bool)
+                    keep[pr[~ok]] = False
+                    need = need[keep]
+                    if use_pos is not None:
+                        use_pos = use_pos[keep]
+                    if peer is not None:
+                        peer = peer[keep]
+                    if stage is not None:
+                        stage = stage[keep]
         if need.size and self.remote is not None:
             # cross-host tier: records whose predicted holder is a peer
             # are pulled host-to-host here, at plan time, so the network
             # round-trip overlaps compute exactly like the storage
-            # prefetch does.  Served records are inserted (consumer now
-            # caches them — the placement rule's handoff) and drop out of
-            # the storage read below; a peer miss stays in ``need`` and
-            # falls back to one storage read.
+            # prefetch does.  Served retention winners are inserted (the
+            # consumer now caches them — the placement rule's handoff),
+            # staged records go to the side buffer; both drop out of the
+            # storage read below, and a peer miss stays in ``need``.
             got = np.zeros(len(need), bool)
             for sel, payload, offs, lens in self.remote.fetch_groups(
                 need, plan.epoch
             ):
-                self.cache.insert(
-                    need[sel],
-                    payload,
-                    offs,
-                    next_use=use_pos[sel] if use_pos is not None else None,
-                    filtered=self.planner,
-                )
-                self.store.stats.account_remote_hits(len(sel), int(lens.sum()))
+                sel_ids = need[sel]
+                stm = stage[sel] if stage is not None else None
+                if stm is not None and stm.any():
+                    self._stage_put(key, sel_ids[stm], payload, offs[stm])
+                cb = ~stm if stm is not None else np.ones(len(sel_ids), bool)
+                if cb.any():
+                    ins, ib = self.cache.insert(
+                        sel_ids[cb],
+                        payload,
+                        offs[cb],
+                        next_use=(
+                            use_pos[sel][cb] if use_pos is not None else None
+                        ),
+                        filtered=self.planner,
+                        with_bytes=True,
+                    )
+                    self.store.stats.account_peer_refills(ins, ib)
+                self.store.stats.account_remote_hits(len(sel_ids),
+                                                     int(lens.sum()))
                 got[sel] = True
             nr = int(got.sum())
             if nr:
@@ -310,14 +490,60 @@ class PrefetchingFetcher:
                 need = need[~got]
                 if use_pos is not None:
                     use_pos = use_pos[~got]
+                if peer is not None:
+                    peer = peer[~got]
+                if stage is not None:
+                    stage = stage[~got]
+            if need.size and peer is not None:
+                # Records with a predicted holder that could not be served
+                # *yet* are deferred to the demand path, never read from
+                # storage here.  A lookahead window straddling an epoch
+                # boundary plans epoch-(e+1) head batches while the
+                # predicted holders — a peer, or this very host — are
+                # still consuming epoch e: the records aren't resident
+                # anywhere *at plan time*, but lockstep consumption
+                # guarantees they will be by demand time (every holder
+                # finishes epoch e first).  Falling back to storage here
+                # is what pushed fleet reads above the (1 − c_global)·n
+                # pigeonhole floor at the epoch edges; deferred records
+                # are re-asked at demand (``_remote_into`` for a peer
+                # holder, a plain local gather for a self holder), and a
+                # genuine miss still storage-reads exactly once.
+                routed = peer >= 0
+                nd = int(routed.sum())
+                if nd:
+                    self.peer_deferred += nd
+                    need = need[~routed]
+                    if use_pos is not None:
+                        use_pos = use_pos[~routed]
+                    if stage is not None:
+                        stage = stage[~routed]
         if need.size == 0:
             return
         rb = self.store.read_batch_ragged(
             need, gap_bytes=self.gap_bytes, workers=self.workers
         )
-        self.cache.insert(
-            need, rb.arena, rb.offsets, next_use=use_pos, filtered=self.planner
-        )
+        if stage is not None and stage.any():
+            self._stage_put(key, need[stage], rb.arena, rb.offsets[stage])
+            cb = ~stage
+            ins, ib = self.cache.insert(
+                need[cb],
+                rb.arena,
+                rb.offsets[cb],
+                next_use=use_pos[cb] if use_pos is not None else None,
+                filtered=self.planner,
+                with_bytes=True,
+            )
+        else:
+            ins, ib = self.cache.insert(
+                need,
+                rb.arena,
+                rb.offsets,
+                next_use=use_pos,
+                filtered=self.planner,
+                with_bytes=True,
+            )
+        self.store.stats.account_prefetch_fills(ins, ib)
         self.prefetch_batches += 1
         self.prefetch_records += len(need)
 
@@ -331,6 +557,10 @@ class PrefetchingFetcher:
     def _serve(self, indices: np.ndarray):
         idx = np.asarray(indices, np.int64)
         key = batch_key(idx)
+        if self._push_on and self._inbox:
+            # previous batch retired at the end of the last serve — its
+            # dead residents' slots are free, so banked pushes land now
+            self._drain_inbox()
         with self._sched_lock:
             if self.background and self._thread is not None:
                 # graceful degradation: a crashed worker is respawned here
@@ -350,9 +580,15 @@ class PrefetchingFetcher:
             )
             # the batch's epoch, for routing demand misses to their
             # predicted peer (placement tables are per-epoch coordinates)
+            # and for pricing the retention push below
             epoch = (
                 self.scheduler.epoch_of(key)
                 if self.remote is not None
+                else None
+            )
+            spec = (
+                self.scheduler.push_spec(idx, epoch)
+                if self._push_on and epoch is not None
                 else None
             )
         if ev is not None:
@@ -368,6 +604,27 @@ class PrefetchingFetcher:
             if self.mode == "dense"
             else self._serve_ragged(idx, nu, epoch)
         )
+        if spec is not None:
+            # consumer-side retention handoff: every just-served record
+            # with a predicted next-epoch holder is pushed there now,
+            # overlapped with the consumer's compute on ``out``
+            if self.mode == "dense":
+                rs = int(self.store.record_size)
+                self._push_retained(
+                    idx,
+                    out.reshape(-1),
+                    np.arange(len(idx), dtype=np.int64) * rs,
+                    np.full(len(idx), rs, np.int64),
+                    spec,
+                )
+            else:
+                self._push_retained(
+                    idx,
+                    out.arena,
+                    out.offsets.astype(np.int64),
+                    out.lengths.astype(np.int64),
+                    spec,
+                )
         # serve first, then slide: the served batch's pins drop only
         # after its bytes are safely materialized.  Retirement is by
         # batch identity — multi-producer pipelines complete fetches out
@@ -376,6 +633,39 @@ class PrefetchingFetcher:
         with self._sched_lock:
             self._dispatch(self.scheduler.advance(idx))
         return out
+
+    def _staged_into(self, idx, hit, dst, dst_off):
+        """Serve this batch's staged floor records: pop the staging
+        entries and copy any still-missing rows straight from the staged
+        arenas into the output buffer — the cache is never touched, and
+        the entry is freed here (each staged record has exactly one
+        window use).  Returns the served mask over ``idx``."""
+        served = np.zeros(len(idx), bool)
+        with self._stage_lock:
+            entries = self._staged.pop(batch_key(idx), None)
+        if not entries:
+            return served
+        order = np.argsort(idx, kind="stable")
+        sidx = idx[order]
+        for ids, payload, offs in entries:
+            pos = np.minimum(
+                np.searchsorted(sidx, ids), max(len(sidx) - 1, 0)
+            )
+            rows = order[pos]
+            okm = (idx[rows] == ids) & ~hit[rows] & ~served[rows]
+            if not okm.any():
+                continue
+            rows = rows[okm]
+            copy_records(
+                payload,
+                offs[okm],
+                dst,
+                dst_off[rows],
+                self.cache.record_lengths[ids[okm]],
+            )
+            served[rows] = True
+        self.staged_records += int(served.sum())
+        return served
 
     def _remote_into(self, idx, miss, dst, dst_off, nu, epoch):
         """Demand-side cross-host serve: fetch the missed records'
@@ -422,8 +712,12 @@ class PrefetchingFetcher:
             dst_off = np.arange(b, dtype=np.int64) * rs
             hit = self.cache.gather(idx, out.reshape(-1), dst_off)
             nh = int(hit.sum())
+            if self._staged and not hit.all():
+                hit = hit | self._staged_into(
+                    idx, hit, out.reshape(-1), dst_off
+                )
             if self.remote is not None and not hit.all():
-                hit |= self._remote_into(
+                hit = hit | self._remote_into(
                     idx, ~hit, out.reshape(-1), dst_off, nu, epoch
                 )
             miss = ~hit
@@ -434,26 +728,31 @@ class PrefetchingFetcher:
                 self.store.read_batch_into(
                     idx, out=out, gap_bytes=self.gap_bytes, workers=self.workers
                 )
-                self.cache.insert(
-                    idx,
-                    out.reshape(-1),
-                    dst_off,
-                    next_use=nu,
-                    filtered=self.planner,
-                )
+                if not self._push_on:
+                    self.cache.insert(
+                        idx,
+                        out.reshape(-1),
+                        dst_off,
+                        next_use=nu,
+                        filtered=self.planner,
+                    )
             elif miss.any():
                 tmp = self.store.read_batch_into(
                     idx[miss], gap_bytes=self.gap_bytes, workers=self.workers
                 )
                 self.cache.account_scratch_copy(tmp.nbytes)
                 out[miss] = tmp
-                self.cache.insert(
-                    idx[miss],
-                    tmp.reshape(-1),
-                    np.arange(len(tmp), dtype=np.int64) * rs,
-                    next_use=nu[miss] if nu is not None else None,
-                    filtered=self.planner,
-                )
+                if not self._push_on:
+                    # push mode populates the cache only through the
+                    # retention handoff — a demand insert here would
+                    # squat on a slot the placement promised to a push
+                    self.cache.insert(
+                        idx[miss],
+                        tmp.reshape(-1),
+                        np.arange(len(tmp), dtype=np.int64) * rs,
+                        next_use=nu[miss] if nu is not None else None,
+                        filtered=self.planner,
+                    )
             # fully-resident batches take the hit side of the handoff:
             # one gather, cache arena → ring slot, zero scratch copies
             if nh:
@@ -474,11 +773,16 @@ class PrefetchingFetcher:
         try:
             dst_off = out_off.astype(np.int64)
             hit = self.cache.gather(idx, arena, dst_off)
+            # byte accounting wants the cache-gather hits only, so every
+            # merge below is non-mutating (``hit = hit | ...``)
             dram_hit = hit
             nh = int(hit.sum())
+            if self._staged and not hit.all():
+                hit = hit | self._staged_into(idx, hit, arena, dst_off)
             if self.remote is not None and not hit.all():
-                dram_hit = hit.copy()
-                hit |= self._remote_into(idx, ~hit, arena, dst_off, nu, epoch)
+                hit = hit | self._remote_into(
+                    idx, ~hit, arena, dst_off, nu, epoch
+                )
             miss = ~hit
             if nh == 0 and not hit.any():
                 # zero-copy handoff (see _serve_dense): the extent gather
@@ -489,9 +793,10 @@ class PrefetchingFetcher:
                     workers=self.workers,
                     out=(arena, out_off, out_len),
                 )
-                self.cache.insert(
-                    idx, arena, dst_off, next_use=nu, filtered=self.planner
-                )
+                if not self._push_on:
+                    self.cache.insert(
+                        idx, arena, dst_off, next_use=nu, filtered=self.planner
+                    )
             elif miss.any():
                 rb = self.store.read_batch_ragged(
                     idx[miss], gap_bytes=self.gap_bytes, workers=self.workers
@@ -500,13 +805,15 @@ class PrefetchingFetcher:
                 copy_records(
                     rb.arena, rb.offsets, arena, dst_off[miss], rb.lengths
                 )
-                self.cache.insert(
-                    idx[miss],
-                    rb.arena,
-                    rb.offsets,
-                    next_use=nu[miss] if nu is not None else None,
-                    filtered=self.planner,
-                )
+                if not self._push_on:
+                    # see _serve_dense: retention is push-only here
+                    self.cache.insert(
+                        idx[miss],
+                        rb.arena,
+                        rb.offsets,
+                        next_use=nu[miss] if nu is not None else None,
+                        filtered=self.planner,
+                    )
             if nh:
                 self.store.stats.account_cache_hits(
                     nh, int(lens[dram_hit].sum())
@@ -531,6 +838,10 @@ class PrefetchingFetcher:
             self._queue.put(_STOP)
             self._thread.join()
             self._thread = None
+        with self._stage_lock:
+            self._staged.clear()
+        with self._inbox_lock:
+            self._inbox.clear()
 
     def __enter__(self):
         return self

@@ -139,6 +139,22 @@ class LookaheadScheduler:
         if planner is None:
             planner = self._track_next_use
         self.planner = bool(planner) and cache is not None
+        # placement-routed belady tier: every planned read is *staged*
+        # by the executor in a window-lifetime side buffer instead of
+        # inserted into the cache — the slice of DRAM
+        # ``IOPlan.prefetch_window_bytes`` already models separately
+        # from ``cache_budget_bytes``.  The cache then holds retention
+        # winners only, populated at retirement by the serve path's
+        # push-to-next-holder, so physical occupancy follows the
+        # placement's (feasible) trajectory.  Without staging, pinned
+        # window reads squeeze retention capacity mid-epoch and
+        # evict/decline placement-predicted winners; at H=1 that
+        # displacement is count-neutral (any retained record is locally
+        # gathered at its next use), but across hosts a lost winner is
+        # one storage read above the pigeonhole floor.
+        self._stage_floor = (
+            self.planner and self._track_next_use and placement is not None
+        )
         self._epoch_pos: Dict[int, np.ndarray] = {}
         self._pinned = 0       # distinct records currently pinned, summed
         # simulated pinned-slot occupancy: for every live window batch,
@@ -222,30 +238,54 @@ class LookaheadScheduler:
             resident, fetch = fresh[:0], fresh[:0]
         else:
             resident, fetch = fresh[:0], fresh
-        to_plan = len(fetch)
+        planned = fetch
         limit = self._pin_limit()
         if limit is not None:
             # a single batch wider than the pin budget (window-empty
             # admission) must not prefetch more than the tier can hold —
             # the overflow would be read, rejected by insert, and read
             # again on demand; leave it to the (single) demand read
-            to_plan = min(to_plan, max(0, limit - self._pinned))
+            planned = planned[: max(0, limit - self._pinned)]
+        use_pos = None
+        stage = None
+        if self._stage_floor and len(planned):
+            # placement-routed tier: *every* planned read is staged in
+            # the executor's window side buffer, never inserted at plan
+            # time.  Retention happens at retirement — the serve path
+            # pushes each consumed record to its predicted next-epoch
+            # holder (possibly itself) — so cache arrivals track the
+            # placement's occupancy trajectory exactly; plan-time
+            # inserts would land up to ``lookahead`` batches early and
+            # overflow the tier right at the epoch boundary, where
+            # occupancy legitimately peaks at capacity.
+            use_pos = self._retention_pos(planned, epoch)
+            stage = np.ones(len(planned), bool)
         if self.planner:
-            # occupancy simulation: every live plan's insert lands pinned,
-            # so the room this plan's insert will find is capacity minus
-            # the window's simulated pinned-slot footprint.  Anything
-            # beyond it is doomed — read, declined (or rejected) at
-            # insert, and read again on demand — so it is dropped here
-            # and served by the (single, admission-filtered) demand read.
-            to_plan = min(
-                to_plan,
-                max(0, self.cache.capacity - self._sim_occupancy),
-            )
-            if to_plan < len(fetch):
-                self.doomed_records += len(fetch) - to_plan
+            # occupancy simulation: every live plan's cache insert lands
+            # pinned, so the room this plan's insert will find is
+            # capacity minus the window's simulated pinned-slot
+            # footprint.  Anything beyond it is doomed — read, declined
+            # (or rejected) at insert, and read again on demand — so it
+            # is dropped here and served by the (single,
+            # admission-filtered) demand read.
+            room = max(0, self.cache.capacity - self._sim_occupancy)
+            if stage is None:
+                planned = planned[:room]
+                if use_pos is not None:
+                    use_pos = use_pos[:room]
+            else:
+                cache_bound = np.flatnonzero(~stage)
+                if len(cache_bound) > room:
+                    keep = np.ones(len(planned), bool)
+                    keep[cache_bound[room:]] = False
+                    planned = planned[keep]
+                    use_pos, stage = use_pos[keep], stage[keep]
+            if len(planned) < len(fetch):
+                self.doomed_records += len(fetch) - len(planned)
                 if self._lengths is not None:
                     self.doomed_bytes += int(
-                        self._lengths[fetch[to_plan:]].sum()
+                        self._lengths[fetch].sum()
+                        - self._lengths[planned].sum()
                     )
         self._window_count[uniq] += 1
         self._pinned += len(uniq)
@@ -260,40 +300,52 @@ class LookaheadScheduler:
         self.planned_records += len(fetch)
         if self._lengths is not None:
             self.planned_bytes += int(self._lengths[fetch].sum())
-        fetch = fetch[:to_plan]
-        use_pos = None
-        if self.planner and self._track_next_use and len(fetch):
+        if self.planner and self._track_next_use and len(planned):
             # the doom rule proper: price each candidate at its *post-use*
-            # reuse (its position in the next epoch's stream) and replay
-            # the cache's admission exchange on that priority.  A loser's
-            # simulated residency ends right after its pinned window use —
-            # it would displace a resident with a *sooner* reuse (a future
-            # retention hit) only to be evicted before its own — so it is
-            # dropped from the plan and demand-read exactly once.  Winners
-            # carry the same priority into the insert, which re-runs the
+            # reuse (its position in the next epoch's stream, placement-
+            # masked) and replay the cache's admission exchange on that
+            # priority.  A loser's simulated residency ends right after
+            # its pinned window use — it would displace a resident with a
+            # *sooner* reuse (a future retention hit) only to be evicted
+            # before its own — so it is dropped from the plan and
+            # demand-read exactly once (with staging on, losers bypass
+            # the cache entirely and are never doomed).  Winners carry
+            # the same priority into the insert, which re-runs the
             # identical exchange under the cache lock.
-            tbl = self._next_epoch_pos(epoch + 1)
-            use_pos = (
-                np.full(len(fetch), NEVER, np.int64)
-                if tbl is None
-                else (epoch + 1) * self.shuffler.num_items + tbl[fetch]
+            if use_pos is None:
+                use_pos = self._retention_pos(planned, epoch)
+            probe = (
+                np.arange(len(planned), dtype=np.int64)
+                if stage is None
+                else np.flatnonzero(~stage)
             )
-            ok = self.cache.admit(fetch, next_use=use_pos)
-            if not ok.all():
-                self.doomed_records += int((~ok).sum())
-                if self._lengths is not None:
-                    self.doomed_bytes += int(self._lengths[fetch[~ok]].sum())
-                fetch, use_pos = fetch[ok], use_pos[ok]
-        occ = len(resident) + len(fetch)
+            if len(probe):
+                ok = self.cache.admit(planned[probe], next_use=use_pos[probe])
+                if not ok.all():
+                    self.doomed_records += int((~ok).sum())
+                    if self._lengths is not None:
+                        self.doomed_bytes += int(
+                            self._lengths[planned[probe[~ok]]].sum()
+                        )
+                    keep = np.ones(len(planned), bool)
+                    keep[probe[~ok]] = False
+                    planned, use_pos = planned[keep], use_pos[keep]
+                    if stage is not None:
+                        stage = stage[keep]
+        occ = len(resident) + (
+            len(planned) if stage is None else int((~stage).sum())
+        )
         self._sim_occupancy += occ
         nbytes = (
-            int(self._lengths[fetch].sum()) if self._lengths is not None else 0
+            int(self._lengths[planned].sum())
+            if self._lengths is not None
+            else 0
         )
         peer = None
-        if self.placement is not None and len(fetch):
-            peer = self.placement.peer_for(fetch, epoch)
+        if self.placement is not None and len(planned):
+            peer = self.placement.peer_for(planned, epoch)
         self._window.append((epoch, seq, uniq, batch_key(batch), occ))
-        return PrefetchPlan(epoch, seq, batch, fetch, nbytes, use_pos, peer)
+        return PrefetchPlan(epoch, seq, batch, planned, nbytes, use_pos, peer)
 
     def _top_up(self) -> List[PrefetchPlan]:
         """Admit batches until the window holds ``lookahead`` of them, the
@@ -342,6 +394,32 @@ class LookaheadScheduler:
                 del self._epoch_pos[e]
         return tbl
 
+    def _retention_pos(self, ids: np.ndarray, epoch: int) -> np.ndarray:
+        """Post-use Belady priorities for records just consumed in
+        ``epoch``: each one's absolute position in epoch ``epoch + 1``'s
+        stream — **placement-masked**.  With a placement attached, a
+        consumed record is only ever asked of this host again if the
+        placement predicts this host as its next holder
+        (``holder_after(epoch) == host_id``); a rank-filter loser will be
+        demanded from storage (nobody routes to us), so pricing it at its
+        true global reuse would make the local tier retain bytes no
+        consumer will request — crowding out the marginal winners the
+        routing *does* send here, which is exactly the divergence that
+        pushed fleet reads above the pigeonhole floor.  Losers price at
+        ``NEVER``: first eviction victims, and they lose every admission
+        exchange against a real winner."""
+        ids = np.asarray(ids, np.int64)
+        tbl = self._next_epoch_pos(epoch + 1)
+        if tbl is None:
+            return np.full(len(ids), NEVER, np.int64)
+        pos = (epoch + 1) * self.shuffler.num_items + tbl[ids]
+        host = getattr(self.shuffler, "host_id", None)
+        if self.placement is not None and host is not None:
+            pos = np.where(
+                self.placement.holder_after(epoch)[ids] == host, pos, NEVER
+            )
+        return pos
+
     def _retire(
         self, key: Optional[Tuple[int, ...]] = None, served: bool = True
     ):
@@ -368,12 +446,11 @@ class LookaheadScheduler:
             self.cache.unpin(uniq)
             if served and self._track_next_use:
                 # the batch's records were just used; each one's next use
-                # is its (known) position in the next epoch's permutation
-                tbl = self._next_epoch_pos(epoch + 1)
-                n = self.shuffler.num_items
+                # is its (known) position in the next epoch's permutation,
+                # placement-masked so only records routed back to this
+                # host keep a retention priority
                 self.cache.note_next_use(
-                    uniq,
-                    NEVER if tbl is None else (epoch + 1) * n + tbl[uniq],
+                    uniq, self._retention_pos(uniq, epoch)
                 )
 
     def next_use_after(
@@ -384,9 +461,11 @@ class LookaheadScheduler:
         (``NEVER`` when the stream ends first), aligned with ``indices``.
         The admission-filtered demand insert runs its exchange on these,
         so a record only displaces a resident whose reuse is farther.
-        The batch's epoch comes from its window entry (by ``key``,
-        falling back to the head); ``None`` when clairvoyant positions
-        are unavailable (no Belady tier, or no index stream)."""
+        Placement-masked (:meth:`_retention_pos`): records this host is
+        not predicted to hold next epoch price at ``NEVER``.  The batch's
+        epoch comes from its window entry (by ``key``, falling back to
+        the head); ``None`` when clairvoyant positions are unavailable
+        (no Belady tier, or no index stream)."""
         if not self._track_next_use or not self._window:
             return None
         k = key if key is not None else batch_key(indices)
@@ -395,11 +474,7 @@ class LookaheadScheduler:
             if entry[3] == k:
                 epoch = entry[0]
                 break
-        ids = np.asarray(indices, np.int64)
-        tbl = self._next_epoch_pos(epoch + 1)
-        if tbl is None:
-            return np.full(len(ids), NEVER, np.int64)
-        return (epoch + 1) * self.shuffler.num_items + tbl[ids]
+        return self._retention_pos(np.asarray(indices, np.int64), epoch)
 
     def epoch_of(self, key: Optional[Tuple[int, ...]]) -> Optional[int]:
         """Epoch of the window entry matching ``key`` (falling back to the
@@ -412,6 +487,26 @@ class LookaheadScheduler:
                 if entry[3] == key:
                     return entry[0]
         return self._window[0][0]
+
+    def push_spec(
+        self, ids: np.ndarray, epoch: int
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Retention handoff for a batch just consumed in ``epoch``:
+        ``(holder, next_use)`` aligned with ``ids`` — each record's
+        predicted epoch-``epoch+1`` holder (``NO_HOST`` = retained
+        nowhere) and its absolute next-epoch stream position, the Belady
+        priority the receiving cache admits it under.  ``None`` when no
+        placement is attached or the stream ends after ``epoch`` (last
+        epoch: nothing to hand over)."""
+        if self.placement is None:
+            return None
+        tbl = self._next_epoch_pos(epoch + 1)
+        if tbl is None:
+            return None
+        ids = np.asarray(ids, np.int64)
+        hold = self.placement.holder_after(epoch)[ids]
+        pos = (epoch + 1) * self.shuffler.num_items + tbl[ids]
+        return hold, pos
 
     def fill(self) -> List[PrefetchPlan]:
         """Prime the window; returns the new plans in admission order."""

@@ -17,18 +17,30 @@ serving side:
   vectorized numpy (de)serialization — no pickling, no per-record
   Python.
 
-Wire format (little-endian), one frame each way per fetch:
+Both transports also carry ``push(peer, ids, payload, offsets,
+lengths, next_use)`` — the consumer-side retention handoff: the host
+that just consumed a record ships its bytes (with the record's
+next-epoch Belady priority) to the placement-predicted next holder,
+which banks them in its fetcher's push inbox and drains into its cache
+between batches.
 
-    request :  u32 n | n × i64 record ids
-    response:  u32 n | n × u8 found mask | u64 payload_bytes
-               | f × i64 lengths (f = found count) | payload bytes
+Wire format (little-endian), one frame each way per operation:
 
-Offsets are reconstructed by cumsum on the client — they are redundant
-on the wire.  Failures (connect refused, short frame, peer gone) raise
-``OSError`` and are the :class:`~repro.prefetch.distributed.RemoteFetcher`'s
-problem: it retries under the PR-6 :class:`~repro.storage.faults.RetryPolicy`
-and falls back to storage, so a dead peer degrades throughput, never
-correctness.
+    fetch request:  u8 op=0 | u32 n | n × i64 record ids
+    fetch response: u32 n | n × u8 found mask | u64 payload_bytes
+                    | f × i64 lengths (f = found count) | payload bytes
+    push request :  u8 op=1 | u32 n | n × i64 record ids
+                    | n × i64 next_use | u64 payload_bytes
+                    | n × i64 lengths | payload bytes
+    push response:  u64 accepted count
+
+Offsets are reconstructed by cumsum on the receiver — they are
+redundant on the wire.  Failures (connect refused, short frame, peer
+gone) raise ``OSError`` and are the
+:class:`~repro.prefetch.distributed.RemoteFetcher`'s problem: fetches
+retry under the PR-6 :class:`~repro.storage.faults.RetryPolicy` and
+fall back to storage; a lost push costs its receiver one storage read
+next epoch — so a dead peer degrades throughput, never correctness.
 """
 from __future__ import annotations
 
@@ -43,9 +55,11 @@ from repro.obs import trace as _trace
 
 FetchResult = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 
-_REQ_HDR = struct.Struct("<I")
+_REQ_HDR = struct.Struct("<BI")   # op, record count
 _RSP_HDR = struct.Struct("<I")
 _U64 = struct.Struct("<Q")
+_OP_FETCH = 0
+_OP_PUSH = 1
 
 
 def _empty_result(n: int) -> FetchResult:
@@ -65,6 +79,7 @@ class LocalTransport:
 
     def __init__(self):
         self._peers: Dict[int, object] = {}
+        self._inboxes: Dict[int, object] = {}
         self._lock = threading.Lock()
         # fault hook for tests: host ids whose fetches currently fail
         self.down: set = set()
@@ -73,9 +88,17 @@ class LocalTransport:
         with self._lock:
             self._peers[int(host_id)] = cache
 
+    def register_inbox(self, host_id: int, fn) -> None:
+        """Install a host's push inbox: ``fn(ids, payload, offsets,
+        lengths, next_use) -> accepted`` (the fetcher's
+        ``_inbox_put``)."""
+        with self._lock:
+            self._inboxes[int(host_id)] = fn
+
     def unregister(self, host_id: int) -> None:
         with self._lock:
             self._peers.pop(int(host_id), None)
+            self._inboxes.pop(int(host_id), None)
 
     def fetch(self, peer: int, ids: np.ndarray) -> FetchResult:
         if peer in self.down:
@@ -93,9 +116,32 @@ class LocalTransport:
         ):
             return cache.export_records(ids, release=True)
 
+    def push(
+        self, peer: int, ids, payload, offsets, lengths, next_use
+    ) -> int:
+        """Hand just-consumed records to their predicted next holder;
+        returns how many the receiver banked.  The caller owns
+        ``payload`` handoff — pass a freshly copied arena, never a view
+        of a reusable serve buffer."""
+        if peer in self.down:
+            raise OSError(f"peer {peer} unreachable (injected)")
+        with self._lock:
+            fn = self._inboxes.get(int(peer))
+        if fn is None:
+            raise OSError(f"peer {peer} has no push inbox")
+        with _trace.span(
+            "remote/push",
+            "remote",
+            args={"peer": int(peer), "records": len(ids)}
+            if _trace.enabled()
+            else None,
+        ):
+            return int(fn(ids, payload, offsets, lengths, next_use))
+
     def close(self) -> None:
         with self._lock:
             self._peers.clear()
+            self._inboxes.clear()
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -119,6 +165,11 @@ class PeerServer:
 
     def __init__(self, cache, host: str = "127.0.0.1", port: int = 0):
         self.cache = cache
+        # push inbox: set to the local fetcher's ``_inbox_put`` once it
+        # exists; until then incoming pushes insert straight into the
+        # cache (admission-filtered — a declined early push costs one
+        # storage read, never correctness)
+        self.inbox = None
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -147,7 +198,48 @@ class PeerServer:
                 hdr = conn.recv(_REQ_HDR.size, socket.MSG_WAITALL)
                 if len(hdr) < _REQ_HDR.size:
                     return
-                (n,) = _REQ_HDR.unpack(hdr)
+                op, n = _REQ_HDR.unpack(hdr)
+                if op == _OP_PUSH:
+                    ids = np.frombuffer(
+                        _recv_exact(conn, 8 * n), "<i8"
+                    ).astype(np.int64)
+                    next_use = np.frombuffer(
+                        _recv_exact(conn, 8 * n), "<i8"
+                    ).astype(np.int64)
+                    (pb,) = _U64.unpack(_recv_exact(conn, _U64.size))
+                    lens = np.frombuffer(
+                        _recv_exact(conn, 8 * n), "<i8"
+                    ).astype(np.int64)
+                    payload = np.frombuffer(_recv_exact(conn, pb), np.uint8)
+                    payload = payload.copy()
+                    offsets = np.concatenate(
+                        ([0], np.cumsum(lens[:-1]))
+                    ).astype(np.int64) if n else np.empty(0, np.int64)
+                    with _trace.span(
+                        "remote/push",
+                        "remote",
+                        args={"records": int(n)}
+                        if _trace.enabled()
+                        else None,
+                    ):
+                        if self.inbox is not None:
+                            accepted = int(
+                                self.inbox(
+                                    ids, payload, offsets, lens, next_use
+                                )
+                            )
+                        else:
+                            accepted = int(
+                                self.cache.insert(
+                                    ids,
+                                    payload,
+                                    offsets,
+                                    next_use=next_use,
+                                    filtered=True,
+                                )
+                            )
+                    conn.sendall(_U64.pack(accepted))
+                    continue
                 ids = np.frombuffer(_recv_exact(conn, 8 * n), "<i8")
                 with _trace.span(
                     "remote/serve",
@@ -216,7 +308,9 @@ class TCPTransport:
         with self._locks[peer]:
             try:
                 sock = self._conn(peer)
-                sock.sendall(_REQ_HDR.pack(n) + ids.astype("<i8").tobytes())
+                sock.sendall(
+                    _REQ_HDR.pack(_OP_FETCH, n) + ids.astype("<i8").tobytes()
+                )
                 (rn,) = _RSP_HDR.unpack(_recv_exact(sock, _RSP_HDR.size))
                 if rn != n:
                     raise OSError(f"peer {peer} answered {rn} ids for {n}")
@@ -236,6 +330,46 @@ class TCPTransport:
         if f == 0:
             offsets = np.empty(0, np.int64)
         return found, payload, offsets, lens
+
+    def push(
+        self, peer: int, ids, payload, offsets, lengths, next_use
+    ) -> int:
+        peer = int(peer)
+        if peer not in self.addresses:
+            raise OSError(f"peer {peer} has no address")
+        ids = np.asarray(ids, np.int64)
+        n = len(ids)
+        if n == 0:
+            return 0
+        lengths = np.asarray(lengths, np.int64)
+        offsets = np.asarray(offsets, np.int64)
+        # repack into a contiguous arena in id order for the wire
+        payload = np.asarray(payload, np.uint8)
+        parts = [
+            payload[offsets[i] : offsets[i] + lengths[i]] for i in range(n)
+        ]
+        body = (
+            np.concatenate(parts) if parts else np.empty(0, np.uint8)
+        )
+        frame = b"".join(
+            (
+                _REQ_HDR.pack(_OP_PUSH, n),
+                ids.astype("<i8").tobytes(),
+                np.asarray(next_use, np.int64).astype("<i8").tobytes(),
+                _U64.pack(body.nbytes),
+                lengths.astype("<i8").tobytes(),
+                body.tobytes(),
+            )
+        )
+        with self._locks[peer]:
+            try:
+                sock = self._conn(peer)
+                sock.sendall(frame)
+                (accepted,) = _U64.unpack(_recv_exact(sock, _U64.size))
+            except OSError:
+                self._drop(peer)
+                raise
+        return int(accepted)
 
     def _drop(self, peer: int):
         sock = self._conns.pop(peer, None)

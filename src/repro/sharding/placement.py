@@ -15,20 +15,31 @@ The placement rule is closed-form, derived from exact next-use
 positions (the same pigeonhole argument that made Belady ``hit = c``
 exact):
 
-* **who caches** — the *consumer* caches: record ``r``, consumed in
-  epoch ``e`` by host ``h``, can only be retained by ``h`` (it is the
-  one host holding the bytes for free after serving them).  The holder
-  for epoch ``e+1`` is therefore a pure function of epoch ``e``'s
-  permutation and the slot bounds — every host computes it locally, no
-  directory service, no communication.
-* **what is retained** — among the records host ``h`` consumed in epoch
-  ``e``, the ``capacity_h`` with the *soonest* next use (their position
-  in epoch ``e+1``'s stream) win the admission exchange; the rest are
-  not worth a slot anywhere.  Every retained record is reused exactly
-  once next epoch, so aggregate avoided storage reads are exactly
-  ``sum(capacity_h)`` per epoch — the fleet reads
-  ``(1 − c_global) · n`` records/epoch regardless of *which* host holds
-  what, the distributed pigeonhole.
+* **who caches** — the *next consumer* caches: record ``r``, consumed
+  in epoch ``e`` by host ``h`` and due on host ``g`` in epoch ``e+1``,
+  is retained by ``g`` — ``h`` hands the bytes over at ``r``'s epoch-e
+  use (a push, overlapped with compute), and ``g``'s epoch-``e+1`` use
+  is then a local DRAM hit.  The holder table is a pure function of
+  epoch ``e+1``'s permutation and the slot bounds — every host computes
+  it locally, no directory service, no communication.  Retaining on the
+  *source* consumer instead (the natural first guess) is infeasible:
+  mid-epoch, a host's not-yet-consumed old winners coexist with its
+  already-consumed new winners and the joint set overflows
+  ``capacity_h`` by up to ~``capacity_h/2`` — records get evicted or
+  declined, and every loss is one storage read above the floor.
+* **what is retained** — among the records host ``g`` will consume in
+  epoch ``e+1``, the ``capacity_g`` with the *soonest* epoch-``e+1``
+  use (``g``'s stream head) win; the rest are not worth a slot
+  anywhere.  This choice makes the per-host occupancy trajectory
+  feasible *by construction*: ``g``'s old winners are its epoch-``e``
+  stream head — consumed (and freed) at the full local consumption rate
+  early in the epoch — while new winners trickle in at the fleet
+  consumption rate scaled by ``capacity_g/n``, so departures always
+  lead arrivals and occupancy never exceeds ``capacity_g``.  Every
+  retained record is reused exactly once next epoch, so aggregate
+  avoided storage reads are exactly ``sum(capacity_h)`` per epoch — the
+  fleet reads ``(1 − c_global) · n`` records/epoch, the distributed
+  pigeonhole, and hits it *exactly*.
 
 The rule is *advisory*: the live per-host tiers enforce capacity with
 their own admission exchange, and a consumer whose placement lookup
@@ -106,12 +117,13 @@ class ClairvoyantPlacement:
     consumed each record last epoch *and* won the retention rank.
 
     ``capacities[h]`` is host ``h``'s cache capacity in records; the
-    retention rule keeps, per host, the ``capacity_h`` consumed records
-    with the soonest next-epoch use (ties broken by record id via the
+    Belady retention rule keeps, per *epoch-``e+1`` consuming* host, the
+    ``capacity_h`` records with the soonest epoch-``e+1`` use — the
+    host's next-epoch stream head (ties broken by record id via the
     stable sort, so every host computes the identical table).  With
     ``policy="lru"`` the rank filter is skipped — recency retention has
-    no closed-form membership, so every consumed record is a *candidate*
-    holder and the peer answers the actual hit/miss.
+    no closed-form membership, so every record's epoch-``e`` consumer is
+    a *candidate* holder and the peer answers the actual hit/miss.
     """
 
     def __init__(
@@ -159,8 +171,13 @@ class ClairvoyantPlacement:
             return np.full(self.num_items, NO_HOST, np.int32)
         tbl = self._holder.get(epoch)
         if tbl is None:
-            tbl = self.consumer_table(epoch).copy()
             if self.policy == "belady":
+                # consumer-side retention: the record's epoch-e+1
+                # consumer holds it, and per host the capacity_h
+                # soonest-used records of its e+1 stream (its head) win
+                # — the unique rank choice whose per-host occupancy
+                # trajectory stays within capacity for the whole epoch
+                tbl = self.consumer_table(epoch + 1).copy()
                 nxt = np.asarray(
                     self.shuffler.epoch_index_stream(epoch + 1), np.int64
                 )
@@ -170,10 +187,10 @@ class ClairvoyantPlacement:
                     members = np.flatnonzero(tbl == h)
                     k = self.capacities[h]
                     if len(members) > k:
-                        # soonest-next-use rank: the admission exchange's
-                        # steady-state winners, in closed form
                         order = np.argsort(next_pos[members], kind="stable")
                         tbl[members[order[k:]]] = NO_HOST
+            else:
+                tbl = self.consumer_table(epoch).copy()
             self._holder[epoch] = tbl
             self._prune(self._holder, epoch)
         return tbl

@@ -132,6 +132,102 @@ def wasted_read_fraction(
     return 0.0
 
 
+def block_lru_hit_fraction(
+    c: float,
+    block_frac: float = 0.0,
+    span_frac: float = 0.0,
+    window_frac: float = 0.0,
+    grid: int = 2048,
+) -> float:
+    """LRU hit rate under a *block-quantized* once-per-epoch stream
+    (CorgiPile / Corgi²: shuffled block order, full shuffle only inside a
+    ``span_frac``·n-record buffer; ``block_frac``·n records share a block
+    and therefore share a buffer group in **every** epoch).
+
+    The classic derivation (:func:`lru_hit_fraction`) prices the distinct
+    records between a use at epoch position ``x`` and the reuse at ``y``
+    as ``D = (1−x) + x·y`` — every other record lands in the tail/head
+    segments independently.  Block streams break that independence for
+    the records *near* the one being priced:
+
+    * a **same-block** peer shares the buffer group in both epochs, so it
+      joins the overlap with probability 1/4 (before/after within the
+      group is a fair coin each epoch) instead of ``(1−x)·y``;
+    * a **same-group** peer (same buffer, different block) shares the
+      group in one epoch only: tail membership there is a fair coin while
+      the other epoch stays uniform — ``y/2`` and ``(1−x)/2`` for the
+      epoch-``e`` and epoch-``e+1`` groups respectively.
+
+    Subtracting those corrections from the overlap leaves, with
+    ``s_b = block_frac`` and ``s = span_frac``,
+
+        D(x, y) = A(x) + B(x)·y
+        A(x) = (1−x)·(1 − (s−s_b)/2) − s_b/4
+        B(x) = (3s − s_b)/2 + (1 − 2s + s_b)·x
+
+    and ``hit = Pr[D < c]`` over uniform ``x, y`` — a one-dimensional
+    integral since ``D`` is linear in ``y``, evaluated by midpoint rule.
+    ``s = s_b = 0`` recovers the classic closed form exactly; the
+    expansion is first-order in the span (valid for ``span_frac ≲ 0.5``
+    — a buffer that big is already "almost full shuffle").
+    ``window_frac`` = λ is the prefetch-window correction, entering the
+    same way as in :func:`lru_hit_fraction` (admission runs λ·n ahead,
+    so ``y`` becomes ``max(0, y − λ)``).  Validated against
+    ``LRUPageCache`` replays of real block streams in
+    ``tests/test_shuffle_quality.py``.
+    """
+    c = min(1.0, max(0.0, c))
+    if c >= 1.0:
+        return 1.0
+    if c <= 0.0:
+        return 0.0
+    s_b = min(max(0.0, block_frac), 0.5)
+    s = min(max(s_b, span_frac), 0.5)
+    if s == 0.0:
+        return lru_hit_fraction(c, window_frac)
+    lam = max(0.0, window_frac)
+    acc = 0.0
+    for i in range(grid):
+        x = (i + 0.5) / grid
+        a = (1.0 - x) * (1.0 - (s - s_b) / 2.0) - s_b / 4.0
+        b = (3.0 * s - s_b) / 2.0 + (1.0 - 2.0 * s + s_b) * x
+        if a >= c:
+            continue
+        if b <= 0.0:
+            acc += 1.0
+            continue
+        acc += min(1.0, lam + (c - a) / b)
+    return min(1.0, acc / grid)
+
+
+def block_cache_hit_model(
+    c: float,
+    policy: str = "lru",
+    block_frac: float = 0.0,
+    span_frac: float = 0.0,
+    window_frac: float = 0.0,
+) -> float:
+    """Closed-form DRAM-tier hit rate under a block-shuffle stream
+    (CorgiPile / Corgi²) — the strategy-aware sibling of
+    :func:`cache_hit_model`.
+
+    Belady is **unchanged**: the pigeonhole argument behind
+    :func:`belady_hit_fraction` only needs every record to be consumed
+    exactly once per epoch (each reuse interval straddles exactly one
+    epoch boundary), which any block shuffle preserves — ``hit = c``
+    exactly, for every block and buffer size.  LRU picks up the
+    block-local correlation correction (:func:`block_lru_hit_fraction`).
+    ``block_frac = span_frac = 0`` reduces to :func:`cache_hit_model`.
+    """
+    if policy == "belady":
+        return belady_hit_fraction(c, window_frac)
+    if policy == "lru":
+        return block_lru_hit_fraction(c, block_frac, span_frac, window_frac)
+    raise ValueError(
+        f"eviction policy must be one of {EVICTION_POLICIES}, got {policy!r}"
+    )
+
+
 def cache_hit_model(
     c: float, policy: str = "lru", window_frac: float = 0.0
 ) -> float:

@@ -127,6 +127,16 @@ class IOStats:
     cache_hit_bytes: int = 0     # payload bytes those hits avoided reading
     remote_hits: int = 0         # records served by a peer host's tier
     remote_hit_bytes: int = 0    # payload bytes moved host-to-host instead
+    # prefetch-side cache fills, counted at the source so the demand-time
+    # ``cache_hits`` they later produce can be decomposed exactly: a
+    # record the prefetch worker inserts (from a peer or from storage) is
+    # gathered from DRAM at demand time and lands in ``cache_hits`` —
+    # subtracting both fill counters leaves the *cross-epoch* local hits,
+    # the quantity ``distributed_hit_model``'s "local" tier prices
+    peer_refills: int = 0        # peer-served records newly inserted by prefetch
+    peer_refill_bytes: int = 0
+    prefetch_fills: int = 0      # storage-read records newly inserted by prefetch
+    prefetch_fill_bytes: int = 0
     retries: int = 0             # transient-fault re-attempts of an extent
     hedged_reads: int = 0        # duplicate reads issued for straggler chunks
     checksum_failures: int = 0   # records whose payload failed verification
@@ -216,6 +226,25 @@ class IOStats:
             self.remote_hits += records
             self.remote_hit_bytes += nbytes
 
+    def account_peer_refills(self, records: int, nbytes: int):
+        """Peer-served records the *prefetch* path newly inserted into the
+        local tier.  These are already counted in ``remote_hits`` at the
+        serve and will surface again as ``cache_hits`` at demand time;
+        this counter is what makes the live local split exact
+        (``local = cache_hits − peer_refills − prefetch_fills``) instead
+        of the old ``total − remote − storage`` derivation."""
+        with self._lock:
+            self.peer_refills += records
+            self.peer_refill_bytes += nbytes
+
+    def account_prefetch_fills(self, records: int, nbytes: int):
+        """Storage-read records the prefetch path newly inserted into the
+        local tier (the in-window fills whose demand-time gathers are
+        ``cache_hits`` but not cross-epoch retention hits)."""
+        with self._lock:
+            self.prefetch_fills += records
+            self.prefetch_fill_bytes += nbytes
+
     # resilience counters: incremented as the events happen (not batched),
     # so they reconcile against a FaultInjector's log even when a batch
     # ultimately fails and charges no I/O
@@ -278,6 +307,8 @@ class IOStats:
             self.coalesced_ios = self.coalesced_records = 0
             self.cache_hits = self.cache_hit_bytes = 0
             self.remote_hits = self.remote_hit_bytes = 0
+            self.peer_refills = self.peer_refill_bytes = 0
+            self.prefetch_fills = self.prefetch_fill_bytes = 0
             self.retries = self.hedged_reads = 0
             self.checksum_failures = self.degraded_batches = 0
 

@@ -17,7 +17,13 @@ import jax
 import numpy as np
 
 from repro.core.pipeline import InputPipeline
-from repro.core.shuffler import BMFShuffler, LIRSShuffler, TFIPShuffler
+from repro.core.shuffler import (
+    BMFShuffler,
+    CorgiPileShuffler,
+    CorgiSquaredShuffler,
+    LIRSShuffler,
+    TFIPShuffler,
+)
 from repro.obs import trace as _trace
 from repro.models.config import ModelConfig
 from repro.train.checkpoint import CheckpointManager
@@ -51,6 +57,16 @@ def make_shuffler(kind: str, num_items: int, batch_size: int, seed: int = 0, **k
         return BMFShuffler(num_items, nb, seed=seed)
     if kind == "tfip":
         return TFIPShuffler(num_items, batch_size, kw.pop("queue_size", 16), seed=seed)
+    if kind in ("corgipile", "corgi2"):
+        cls = CorgiPileShuffler if kind == "corgipile" else CorgiSquaredShuffler
+        return cls(
+            num_items,
+            batch_size,
+            kw.pop("block_records", max(1, batch_size // 2)),
+            buffer_blocks=kw.pop("buffer_blocks", 2),
+            seed=seed,
+            **kw,
+        )
     raise ValueError(kind)
 
 

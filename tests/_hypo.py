@@ -10,7 +10,8 @@ has run.
 The shim draws a fixed number of pseudo-random examples per test from a
 seed derived from the test name, so failures reproduce across runs.  Only
 the strategy surface this repo uses is implemented: ``integers``,
-``floats``, ``binary``, ``lists``, ``sampled_from``, ``data``.
+``floats``, ``binary``, ``booleans``, ``lists``, ``sampled_from``,
+``data``.
 """
 from __future__ import annotations
 
@@ -66,6 +67,10 @@ except ModuleNotFoundError:
                     for _ in range(rng.randint(min_size, max_size))
                 ]
             )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
 
         @staticmethod
         def sampled_from(seq):

@@ -97,10 +97,11 @@ def test_hosts_read_disjoint_shards(tmp_path):
 
 # --------------------------------------------------- clairvoyant placement
 def test_placement_tables_properties():
-    """Closed-form tables obey their own contract: holders are previous-
-    epoch consumers, per-host retention is capacity-bounded (and exactly
-    capacity under belady when the host consumed enough), and epoch 0 has
-    no holders to ask."""
+    """Closed-form tables obey their own contract: under belady a record
+    is retained by its *next*-epoch consumer (the feasible,
+    consumer-side rule), per-host retention is exactly capacity, winners
+    are each host's next-epoch stream head, and epoch 0 has no holders
+    to ask."""
     n, hosts = 512, 4
     sh = LIRSShuffler(n, 64, seed=9)
     caps = [32, 32, 32, 32]
@@ -108,14 +109,24 @@ def test_placement_tables_properties():
     for e in range(3):
         cons = pl.consumer_table(e)
         assert cons.min() >= 0 and cons.max() < hosts  # full coverage
+        nxt = pl.consumer_table(e + 1)
         hold = pl.holder_after(e)
         m = hold != NO_HOST
-        assert (hold[m] == cons[m]).all()  # only the consumer retains
+        # the next-epoch consumer retains — nobody else
+        assert (hold[m] == nxt[m]).all()
+        stream = np.asarray(sh.epoch_index_stream(e + 1), np.int64)
+        next_pos = np.empty(n, np.int64)
+        next_pos[stream] = np.arange(n)
         for h in range(hosts):
-            assert int((hold == h).sum()) == caps[h]
+            mine = np.flatnonzero(hold == h)
+            assert len(mine) == caps[h]
+            # winners are h's soonest epoch-(e+1) uses among its records
+            losers = np.flatnonzero((nxt == h) & (hold == NO_HOST))
+            if len(losers):
+                assert next_pos[mine].max() < next_pos[losers].min()
     assert (pl.peer_for(np.arange(n), 0) == NO_HOST).all()
     assert pl.expected_storage_reads() == n - sum(caps)
-    # lru placement: every consumer is a candidate holder
+    # lru placement: every *current* consumer is a candidate holder
     pl_lru = ClairvoyantPlacement(sh, hosts, caps, policy="lru")
     assert (pl_lru.holder_after(0) == pl_lru.consumer_table(0)).all()
 
@@ -206,12 +217,14 @@ def test_cluster_batches_byte_identical(
     ref.close()
 
 
-def test_cluster_aggregate_reads_near_floor(fixed_path):
+@pytest.mark.parametrize("hosts", [2, 4])
+def test_cluster_aggregate_reads_at_floor(hosts, fixed_path):
     """Fleet storage reads per steady epoch sit at the pigeonhole floor
-    ``n - sum(capacity_h)`` plus at most the epoch-edge window race (the
-    lookahead batches whose holder wasn't populated yet), and every
-    remote serve is accounted on both ends."""
-    hosts, lookahead = 4, 4
+    ``n - sum(capacity_h)`` **exactly** — the consumer-side retention
+    handoff leaves no epoch-edge race to absorb — and every cross-host
+    transfer is a push the receiver banked (``remote_hits`` pairs with
+    ``peer_refills``; the pull path idles)."""
+    lookahead = 4
     sh = LIRSShuffler(N, BATCH, seed=7, avg_instance_bytes=RECORD)
     with make_cluster(
         lambda: RecordStore(fixed_path),
@@ -233,22 +246,24 @@ def test_cluster_aggregate_reads_near_floor(fixed_path):
             per_epoch.append(total - prev)
             prev = total
         floor = cl.placement.expected_storage_reads()
+        assert per_epoch[0] == N  # cold epoch reads everything once
         for reads in per_epoch[1:]:
-            assert floor <= reads <= floor + 2 * lookahead * hosts, (
-                per_epoch,
-                floor,
-            )
+            assert reads == floor, (per_epoch, floor)
         agg = cl.aggregate_io()
         assert agg["peer_failures"] == 0 and agg["peer_errors"] == 0
+        assert agg["push_errors"] == 0
+        assert agg["peer_pushes"] > 0
         assert agg["remote_hits"] > 0
-        assert agg["remote_hits"] == agg["remote_served"]
-        assert agg["remote_hit_bytes"] == agg["remote_served_bytes"]
+        assert agg["remote_hits"] == agg["peer_refills"]
+        assert agg["remote_hit_bytes"] > 0
+        assert agg["remote_served"] == 0  # nothing pulled
 
 
 def test_peer_failure_falls_back_to_storage(fixed_path):
     """A dead peer degrades to storage reads, never corrupts a batch:
-    retries are bounded, the fetch counts a peer_failure, and bytes stay
-    identical to the direct read."""
+    retention pushes to it fail (counted, single attempt — the serve
+    path never stalls on a dead receiver), its records re-read from
+    storage next epoch, and bytes stay identical to the direct read."""
     ref = RecordStore(fixed_path)
     sh = LIRSShuffler(N, BATCH, seed=2, avg_instance_bytes=RECORD)
     retry = RetryPolicy(
@@ -275,8 +290,9 @@ def test_peer_failure_falls_back_to_storage(fixed_path):
                     np.asarray(fetcher(idx)), ref.read_batch_into(idx)
                 )
         agg = cl.aggregate_io()
-        assert agg["peer_failures"] > 0
-        assert agg["peer_errors"] >= agg["peer_failures"]  # retried first
+        assert agg["push_errors"] > 0
+        assert agg["peer_errors"] >= agg["push_errors"]  # counted per attempt
+        assert agg["peer_failures"] == 0  # nothing pulled, nothing abandoned
     ref.close()
 
 
@@ -322,6 +338,10 @@ def _tcp_mesh_target(spec, path, n, batch, budget_bytes, epochs):
         remote=remote,
         placement=placement,
     )
+    # wire the retention-push inbox, then barrier: every host's server
+    # must accept pushes before any peer starts serving (and pushing)
+    server.inbox = fetcher._inbox_put
+    spec.all_gather(None)
     for e in range(epochs):
         for part in fetcher.batch_iter(e):
             got = fetcher(part)
@@ -329,15 +349,24 @@ def _tcp_mesh_target(spec, path, n, batch, budget_bytes, epochs):
             spec.all_gather(None)  # per-step lockstep, peers stay populated
     stats = spec.all_gather(
         {
-            "remote_hits": remote.fetcher.remote_hits,
+            "remote_hits": store.stats.remote_hits,
+            "pushed": fetcher.pushed_records,
+            "push_errors": fetcher.push_errors,
             "peer_failures": remote.fetcher.peer_failures,
             "storage_records": store.stats.batch_records,
         }
     )
     assert sum(v["peer_failures"] for v in stats.values()) == 0
+    assert sum(v["push_errors"] for v in stats.values()) == 0
+    assert sum(v["pushed"] for v in stats.values()) > 0
     assert sum(v["remote_hits"] for v in stats.values()) > 0
-    # the cross-host tier avoided rereads: fleet reads < every-record-every-epoch
-    assert sum(v["storage_records"] for v in stats.values()) < epochs * n
+    # TCPTransport.push is synchronous (acked before the serve returns),
+    # so the lockstep mesh hits the pigeonhole floor exactly over the wire
+    floor = placement.expected_storage_reads()
+    assert (
+        sum(v["storage_records"] for v in stats.values())
+        == n + (epochs - 1) * floor
+    )
     fetcher.close()
     server.close()
     transport.close()

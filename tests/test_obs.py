@@ -339,10 +339,10 @@ def test_drift_single_host_report_prices_time_through_device():
     assert rep.ok, rep.format()
 
 
-def test_drift_distributed_report_derives_local():
-    """local=None derives local = total − remote − storage (the live
-    cluster mapping, where cache_hits double-counts peer-served
-    records)."""
+def test_drift_distributed_report_uses_direct_local_count():
+    """The local split comes straight from the source-counted local
+    tier (``aggregate_io()``'s ``cache_hits − peer_refills −
+    prefetch_fills``) — no ``total − remote − storage`` derivation."""
     n, hosts, c = 1024, 2, 0.8
     from repro.storage.devices import distributed_hit_model
 
@@ -352,10 +352,17 @@ def test_drift_distributed_report_derives_local():
         window_frac=0.1, epochs=2,
         remote_hits=2 * split["remote"] * n,
         storage_records=2 * split["storage"] * n,
+        local_hits=2 * split["local"] * n,
     )
     assert rep.ok, rep.format()
     local = next(c for c in rep.checks if c.name == "split/local")
     assert local.measured == pytest.approx(split["local"], abs=1e-9)
+    with pytest.raises(TypeError):
+        drift.distributed_report(
+            n_records=n, hosts=hosts, capacity_frac_global=c,
+            policy="belady", window_frac=0.1, epochs=2,
+            remote_hits=0.0, storage_records=0.0,
+        )
 
 
 # -------------------------------------------- five-layer trace (fast)

@@ -1,0 +1,236 @@
+"""Block-shuffle strategies (CorgiPile / Corgi²): stream semantics and
+the clairvoyant tier's strategy-agnosticism.
+
+The spectrum's contract is that a block shuffler plugs into the whole
+LIRS stack by exposing the same ``epoch_index_stream`` clairvoyance a
+permutation does — so the scheduler, planner, Belady eviction and the
+tiered read path must produce byte-identical batches over it, for every
+policy × planner × store-kind combination (the same matrix
+``tests/test_prefetch.py`` runs for LIRS).  Stream-level properties
+(coverage, determinism, buffer-group locality, the scatter that makes
+Corgi² different) are property-tested above that.
+"""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import InputPipeline, store_fetch_fn
+from repro.core.shuffler import (
+    BMFShuffler,
+    CorgiPileShuffler,
+    CorgiSquaredShuffler,
+)
+from repro.prefetch import PrefetchingFetcher
+from repro.train.loop import make_shuffler
+from tests._hypo import given, settings, st
+
+
+# ------------------------------------------------------ stream semantics
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(10, 500),
+    bs=st.integers(1, 64),
+    blk=st.integers(1, 96),
+    buf=st.integers(1, 8),
+    epoch=st.integers(0, 4),
+    seed=st.integers(0, 99),
+    squared=st.booleans(),
+)
+def test_block_stream_covers_every_instance_exactly_once(
+    n, bs, blk, buf, epoch, seed, squared
+):
+    cls = CorgiSquaredShuffler if squared else CorgiPileShuffler
+    sh = cls(n, min(bs, n), blk, buffer_blocks=buf, seed=seed)
+    stream = sh.epoch_index_stream(epoch)
+    assert np.array_equal(np.sort(stream), np.arange(n))
+    # and batches are exactly the stream, chunked
+    assert np.array_equal(
+        np.concatenate(list(sh.epoch_batches(epoch))), stream
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 99), squared=st.booleans())
+def test_block_stream_deterministic_across_instances(seed, squared):
+    """Clairvoyance survives process boundaries: two shufflers built
+    from the same (seed, geometry) emit identical streams — what the
+    multi-host placement tables rely on."""
+    cls = CorgiSquaredShuffler if squared else CorgiPileShuffler
+    a = cls(300, 32, 48, buffer_blocks=3, seed=seed)
+    b = cls(300, 32, 48, buffer_blocks=3, seed=seed)
+    for e in (0, 2):
+        assert np.array_equal(a.epoch_index_stream(e), b.epoch_index_stream(e))
+    assert not np.array_equal(
+        a.epoch_index_stream(0), a.epoch_index_stream(1)
+    )  # but epochs differ
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(64, 400),
+    blk=st.integers(8, 64),
+    buf=st.integers(1, 6),
+    seed=st.integers(0, 99),
+)
+def test_randomness_quantized_to_buffer_groups(n, blk, buf, seed):
+    """CorgiPile's DRAM bound, as a stream property: the output is a
+    sequence of contiguous segments, each a permutation of one buffer
+    group's blocks — no record escapes its group."""
+    sh = CorgiPileShuffler(n, 32, blk, buffer_blocks=buf, seed=seed)
+    rng = np.random.default_rng(sh._epoch_rng_key(1))
+    order = rng.permutation(sh.num_blocks)
+    stream = sh.epoch_index_stream(1)
+    w = 0
+    for g in range(0, sh.num_blocks, buf):
+        grp = np.concatenate([sh.blocks[int(b)] for b in order[g : g + buf]])
+        seg = stream[w : w + len(grp)]
+        assert np.array_equal(np.sort(seg), np.sort(grp))
+        w += len(grp)
+    assert w == n
+
+
+def test_corgi2_scatter_is_a_partition_not_contiguous_runs():
+    sh = CorgiSquaredShuffler(512, 64, 64, buffer_blocks=2, seed=5)
+    phys = sh.physical_order()
+    assert np.array_equal(np.sort(phys), np.arange(512))
+    # random scatter: a block's ids span (nearly) the whole range, unlike
+    # CorgiPile's contiguous runs
+    plain = CorgiPileShuffler(512, 64, 64, buffer_blocks=2, seed=5)
+    for blocks, contiguous in ((sh.blocks, False), (plain.blocks, True)):
+        spans = [int(b.max() - b.min()) for b in blocks]
+        if contiguous:
+            assert all(s == len(b) - 1 for s, b in zip(spans, blocks))
+        else:
+            assert np.mean(spans) > 256  # scattered wide
+
+
+def test_io_plan_prices_corgi2_preprocess_like_bmf():
+    """Corgi²'s offline scatter is the same full-read + random
+    write-back pass BMF pays (Fig 7a); plain CorgiPile pays none."""
+    n, total = 1024, 1e8
+    c2 = CorgiSquaredShuffler(n, 128, 128).io_plan(total, is_sparse=False)
+    bmf = BMFShuffler(n, 8).io_plan(total, is_sparse=False)
+    assert c2.preprocess_seq_read_bytes == bmf.preprocess_seq_read_bytes
+    assert c2.preprocess_rand_write_ios == bmf.preprocess_rand_write_ios
+    assert c2.preprocess_rand_write_bytes == bmf.preprocess_rand_write_bytes
+    plain = CorgiPileShuffler(n, 128, 128).io_plan(total, is_sparse=False)
+    assert plain.preprocess_rand_write_ios == 0
+    assert plain.preprocess_seq_read_bytes == 0
+
+
+def test_io_plan_belady_hit_is_capacity_and_coalescing_span_local():
+    n, rb = 4096, 64
+    total = float(n * rb)
+    sh = CorgiPileShuffler(
+        n, 128, 256, buffer_blocks=2, avg_instance_bytes=rb
+    )
+    plan = sh.io_plan(
+        total,
+        is_sparse=False,
+        coalesce_gap=4 * rb,
+        cache_budget_bytes=0.25 * total,
+        eviction_policy="belady",
+    )
+    assert plan.cache_hit_fraction == pytest.approx(0.25)
+    # batches are dense in the 512-record span: far better coalescing
+    # than the same batch scattered over all n
+    lirs_like = CorgiPileShuffler(
+        n, 128, 1, buffer_blocks=n, avg_instance_bytes=rb
+    ).io_plan(
+        total,
+        is_sparse=False,
+        coalesce_gap=4 * rb,
+        cache_budget_bytes=0.25 * total,
+        eviction_policy="belady",
+    )
+    assert plan.coalescing_factor > lirs_like.coalescing_factor
+
+
+# ------------------------------------------------------------- loop glue
+def test_make_shuffler_builds_block_strategies():
+    sh = make_shuffler("corgipile", 256, 32, seed=4, block_records=16,
+                       buffer_blocks=4)
+    assert isinstance(sh, CorgiPileShuffler)
+    assert not isinstance(sh, CorgiSquaredShuffler)
+    assert (sh.block_records, sh.buffer_blocks) == (16, 4)
+    sq = make_shuffler("corgi2", 256, 32, seed=4)
+    assert isinstance(sq, CorgiSquaredShuffler)
+    assert sq.block_records == 16  # default: batch // 2
+    with pytest.raises(ValueError):
+        make_shuffler("corgi3", 256, 32)
+
+
+# ---------------------------------------- the tier is strategy-agnostic
+@pytest.fixture(scope="module")
+def stores(tmp_path_factory):
+    from repro.core.location import LocationGenerator
+    from repro.storage.record_store import RecordStore, RecordWriter
+
+    rng = np.random.default_rng(11)
+    path_d = str(tmp_path_factory.mktemp("sf") / "fixed.rrec")
+    with RecordWriter(path_d, record_size=64) as w:
+        for _ in range(400):
+            w.append(rng.bytes(64))
+    dense = RecordStore(path_d)
+    path_r = str(tmp_path_factory.mktemp("sf") / "var.rrec")
+    with RecordWriter(path_r) as w:
+        for _ in range(400):
+            w.append(rng.bytes(int(rng.integers(4, 80))))
+    ragged = RecordStore(path_r)
+    LocationGenerator().generate(ragged)
+    yield {"dense": dense, "ragged": ragged}
+    dense.close()
+    ragged.close()
+
+
+def _epoch_bytes(pipe, epochs):
+    out = []
+    for e in range(epochs):
+        for item in pipe.epoch(e):
+            if isinstance(item, np.ndarray):
+                out.append(bytes(item.reshape(-1)))
+            else:  # RaggedBatch
+                out.append(
+                    bytes(item.arena)
+                    + item.offsets.tobytes()
+                    + item.lengths.tobytes()
+                )
+    return out
+
+
+@pytest.mark.parametrize("strategy", ["corgipile", "corgi2"])
+@pytest.mark.parametrize("policy", ["lru", "belady"])
+@pytest.mark.parametrize("planner", [False, True])
+@pytest.mark.parametrize("kind", ["dense", "ragged"])
+def test_block_shuffle_batches_byte_identical_through_tier(
+    stores, kind, planner, policy, strategy
+):
+    """The spectrum's acceptance matrix: 3 epochs of CorgiPile/Corgi²
+    batches are byte-identical with the tiered read path on or off, for
+    {lru, belady} × {planner on, off} × {dense, ragged}, multi-producer
+    — the tier only ever consumed ``epoch_index_stream``, so block
+    streams ride the same clairvoyance as LIRS permutations."""
+    store = stores[kind]
+    sh = make_shuffler(
+        strategy, store.num_records, 32, seed=6,
+        block_records=48, buffer_blocks=3,
+    )
+    base = _epoch_bytes(
+        InputPipeline(
+            lambda e: sh.epoch_batches(e),
+            store_fetch_fn(store),
+            prefetch=2,
+            num_producers=2,
+        ),
+        epochs=3,
+    )
+    budget = int(store.file_size * 0.3)
+    with PrefetchingFetcher(
+        store, sh, budget_bytes=budget, lookahead=5, workers=2,
+        policy=policy, planner=planner,
+    ) as f:
+        got = _epoch_bytes(
+            InputPipeline(f.batch_iter, f, prefetch=2, num_producers=2),
+            epochs=3,
+        )
+        assert f.last_error is None
+    assert got == base
