@@ -29,6 +29,7 @@ def main() -> None:
         queue_size,
         ragged_read,
         roofline,
+        serve_latency,
         shuffle_frontier,
         svm_convergence,
         training_time,
@@ -47,6 +48,7 @@ def main() -> None:
         "prefetch": prefetch,                   # clairvoyant prefetch + DRAM tier
         "multihost_read": multihost_read,       # distributed tier aggregate-read invariant
         "shuffle_frontier": shuffle_frontier,   # strategy spectrum: entropy vs epoch I/O
+        "serve_latency": serve_latency,         # continuous-batching serving sweep
         "fault_overhead": fault_overhead,       # resilience scaffold cost gate
         "obs_overhead": obs_overhead,           # observability cost gate
         "roofline": roofline,                   # §Roofline (from dry-run)

@@ -1,0 +1,219 @@
+"""serve_latency — throughput vs p50/p99 sweep for the serving engine.
+
+Drives :class:`repro.serve.ServeEngine` at three offered loads (Poisson
+arrivals per engine step), once with continuous (in-flight) batching and
+once with static run-to-completion batches — same model, same arena
+shape, same per-step compute; only the refill rule differs.  Latency
+percentiles are measured on the deterministic step clock (identical
+workload seed → identical schedule), tokens/s on the wall clock.
+
+Gated headline: at **every** offered load, continuous batching must
+strictly dominate static — more tokens per second at an equal-or-lower
+p99 (``domination_violations == 0``; the ISSUE's bar asks for ≥ 2
+loads).  ``tokens_per_step`` is the deterministic version of the same
+win: the continuous engine retires the workload in fewer arena-wide
+decode steps.
+
+A second section serves Zipf-popular feature ids through the
+estimated-reuse :class:`RequestStreamCache` and holds the measured hit
+rate to the closed-form band ``[served_hit_model(lru),
+served_hit_model(clairvoyant)]`` (with cold-start slack), and the
+cache's counters to exact reconciliation with the store's ``IOStats``.
+
+Emits JSON to benchmarks/results/serve_latency.json and harness CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import cached
+from repro.configs.granite_3_8b import smoke_config
+from repro.models import model as model_lib
+from repro.serve import (
+    RequestStreamCache,
+    ServeEngine,
+    percentile,
+    synthetic_workload,
+    zipf_probabilities,
+)
+from repro.storage.devices import served_hit_model, zipf_popularity
+
+OFFERED_LOADS = (0.3, 0.6, 1.0)
+NUM_REQUESTS = 64
+MAX_BATCH = 4
+PROMPT_CAP = 8
+GEN_CAP = 10
+SEED = 7
+
+# feature-cache section
+NUM_FEATURES = 512
+FEATURES_PER_REQUEST = 8
+CACHE_RECORDS = 64
+ZIPF_ALPHA = 1.1
+FEATURE_ROUNDS = 400
+# the closed forms are steady-state; a finite run pays cold-start
+# misses, so the band gets this much absolute slack on each side
+BAND_SLACK = 0.05
+
+
+def _drive(cfg, params, mode: str, requests):
+    eng = ServeEngine(
+        cfg, params,
+        max_batch=MAX_BATCH,
+        prompt_capacity=PROMPT_CAP,
+        max_new_tokens=GEN_CAP,
+        mode=mode,
+    )
+    eng.warmup()
+    base = eng.generated_tokens
+    t0 = time.perf_counter()
+    comps = eng.run(requests)
+    wall = time.perf_counter() - t0
+    toks = eng.generated_tokens - base
+    lat = [c.latency for c in comps]
+    ttft = [c.ttft for c in comps]
+    return {
+        "requests": len(comps),
+        "generated_tokens": toks,
+        "decode_steps": eng.decode_steps,
+        "tokens_per_step": toks / max(eng.decode_steps, 1),
+        "tokens_per_s": toks / max(wall, 1e-9),
+        "latency_p50": percentile(lat, 50),
+        "latency_p99": percentile(lat, 99),
+        "ttft_p50": percentile(ttft, 50),
+        "ttft_p99": percentile(ttft, 99),
+        "slot_leaks": MAX_BATCH - eng.free_slots,
+    }
+
+
+def _feature_cache_point():
+    import os
+    import tempfile
+
+    from repro.data.synthetic import make_classification_dataset
+    from repro.storage.record_store import RecordStore
+
+    d = tempfile.mkdtemp(prefix="lirs_serve_bench_")
+    path = os.path.join(d, "features.rrec")
+    make_classification_dataset(path, num_records=NUM_FEATURES, dim=16, seed=0)
+    store = RecordStore(path)
+    fc = RequestStreamCache(
+        store,
+        budget_bytes=CACHE_RECORDS * store.record_size,
+        policy="belady",
+    )
+    rng = np.random.default_rng(SEED)
+    p = zipf_probabilities(NUM_FEATURES, ZIPF_ALPHA)
+    for step in range(FEATURE_ROUNDS):
+        ids = rng.choice(
+            NUM_FEATURES, size=FEATURES_PER_REQUEST, p=p
+        ).astype(np.int64)
+        fc.fetch(ids, float(step))
+    pop = zipf_popularity(NUM_FEATURES, ZIPF_ALPHA)
+    capacity = fc.cache.capacity
+    lo = served_hit_model(pop, capacity, "lru")
+    hi = served_hit_model(pop, capacity, "belady")
+    hit = fc.hit_rate
+    reconcile = 0
+    if store.stats.cache_hits != fc.cache.hits:
+        reconcile += 1
+    if store.stats.batch_records != fc.cache.misses:
+        reconcile += 1
+    if fc.cache.hits + fc.cache.misses != fc.fetched:
+        reconcile += 1
+    return {
+        "capacity_records": capacity,
+        "hits": fc.cache.hits,
+        "misses": fc.cache.misses,
+        "hit_rate": hit,
+        "model_lru": lo,
+        "model_clairvoyant": hi,
+        "band_violations": int(not lo - BAND_SLACK <= hit <= hi + BAND_SLACK),
+        "reconcile_violations": reconcile,
+        "rejected": fc.cache.rejected,
+    }
+
+
+def _compute():
+    cfg = smoke_config()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    points = {}
+    domination_violations = 0
+    slot_leaks = 0
+    for load in OFFERED_LOADS:
+        requests = synthetic_workload(
+            NUM_REQUESTS,
+            vocab=cfg.vocab_size,
+            offered_load=load,
+            prompt_len=(max(1, PROMPT_CAP // 2), PROMPT_CAP),
+            gen_len=(max(1, GEN_CAP // 2), GEN_CAP),
+            seed=SEED,
+        )
+        cont = _drive(cfg, params, "continuous", requests)
+        stat = _drive(cfg, params, "static", requests)
+        dominates = (
+            cont["tokens_per_s"] > stat["tokens_per_s"]
+            and cont["tokens_per_step"] > stat["tokens_per_step"]
+            and cont["latency_p99"] <= stat["latency_p99"]
+        )
+        domination_violations += int(not dominates)
+        slot_leaks += cont["slot_leaks"] + stat["slot_leaks"]
+        points[f"load{load}"] = {"continuous": cont, "static": stat}
+    feature = _feature_cache_point()
+    return {
+        "offered_loads": list(OFFERED_LOADS),
+        "max_batch": MAX_BATCH,
+        "requests_per_load": NUM_REQUESTS,
+        "points": points,
+        "feature_cache": feature,
+        "headline": {
+            "domination_violations": domination_violations,
+            "slot_leaks": slot_leaks,
+            "band_violations": feature["band_violations"],
+            "reconcile_violations": feature["reconcile_violations"],
+        },
+    }
+
+
+def run(force: bool = False):
+    return cached("serve_latency", _compute, force)
+
+
+def rows():
+    res = run()
+    out = []
+    for key, p in res["points"].items():
+        for mode in ("continuous", "static"):
+            e = p[mode]
+            out.append((
+                f"serve_latency/{key}/{mode}",
+                1e6 / max(e["tokens_per_s"], 1e-9),
+                f"tok/s={e['tokens_per_s']:.0f} "
+                f"tok/step={e['tokens_per_step']:.2f} "
+                f"p50={e['latency_p50']:.1f} p99={e['latency_p99']:.1f}",
+            ))
+    f = res["feature_cache"]
+    out.append((
+        "serve_latency/feature_cache",
+        0.0,
+        f"hit={f['hit_rate']:.3f} band=[{f['model_lru']:.3f}"
+        f",{f['model_clairvoyant']:.3f}]",
+    ))
+    h = res["headline"]
+    out.append((
+        "serve_latency/headline",
+        0.0,
+        f"domination_violations={h['domination_violations']} "
+        f"slot_leaks={h['slot_leaks']} "
+        f"band_violations={h['band_violations']}",
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    run(force="--force" in __import__("sys").argv)
+    for name, us, derived in rows():
+        print(f"{name},{us:.3f},{derived}")

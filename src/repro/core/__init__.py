@@ -9,6 +9,12 @@
 from repro.core.assignment import FeistelAssignment, TableAssignment  # noqa: F401
 from repro.core.location import LocationGenerator  # noqa: F401
 from repro.core.pipeline import InputPipeline, store_fetch_fn  # noqa: F401
+from repro.core.readpath import (  # noqa: F401
+    ReadPathConfig,
+    batch_iter_fn_of,
+    build_data_plane,
+    close_data_plane,
+)
 from repro.core.sampler import ShardedSampler  # noqa: F401
 from repro.core.shuffler import (  # noqa: F401
     BMFShuffler,

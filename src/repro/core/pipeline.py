@@ -32,18 +32,14 @@ from __future__ import annotations
 
 import queue
 import threading
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator, Optional
 
 import numpy as np
 
 from repro.obs import trace as _trace
-from repro.storage.record_store import (
-    PAGE,
-    BatchBufferRing,
-    RaggedBufferRing,
-    RecordStore,
-)
+from repro.storage.record_store import PAGE, RecordStore
 
 
 @dataclass
@@ -315,98 +311,42 @@ def store_fetch_fn(
     remote: Any = None,
     placement: Any = None,
 ) -> Callable[[np.ndarray], Any]:
-    """Build an :class:`InputPipeline` ``fetch_fn`` over a record store.
+    """Deprecated shim over :func:`repro.core.readpath.build_data_plane`.
 
-    ``mode='dense'`` materializes fixed-size batches with
-    ``read_batch_into`` (into ``ring`` buffers when given a
-    :class:`~repro.storage.record_store.BatchBufferRing`); ``mode='ragged'``
-    materializes variable-length batches with ``read_batch_ragged`` (arena
-    triples, optionally from a
-    :class:`~repro.storage.record_store.RaggedBufferRing`).  ``'auto'``
-    picks ragged for variable-length stores and dense otherwise — the one
-    decision point where the two hot paths diverge.
+    The fifteen keywords accreted here are now one frozen
+    :class:`~repro.core.readpath.ReadPathConfig`; this wrapper builds the
+    equivalent config and delegates, so behaviour and batch bytes are
+    identical (the byte-identity matrix in ``tests/test_serve.py`` holds
+    it to that).  New callers should write::
 
-    ``cache_budget_bytes`` > 0 (with a ``shuffler``) selects the tiered
-    read path instead: a
-    :class:`~repro.prefetch.fetcher.PrefetchingFetcher` serving resident
-    records from a byte-budgeted DRAM cache and prefetching future
-    batches along the shuffler's known index stream, evicting by
-    ``eviction_policy`` (``lru``, or ``belady`` — farthest-next-use,
-    exact under clairvoyance).  ``prefetch_planner`` toggles the
-    policy-aware planner (None = auto: on for a Belady tier): plans are
-    occupancy-simulated so doomed records are never read twice, and
-    inserts are admission-filtered so the cache retains by reuse
-    distance instead of arrival order.  The returned object is still a
-    plain ``fetch_fn`` (batch bytes are identical with the tier on or
-    off, for every policy and planner setting); additionally pass its
-    ``batch_iter`` as the pipeline's ``batch_iter_fn`` so the lookahead
-    window re-syncs at epoch boundaries.
-
-    ``remote`` / ``placement`` extend the tiered path across hosts
-    (``repro.prefetch.distributed``): ``placement`` is the shared
-    :class:`~repro.sharding.placement.ClairvoyantPlacement` annotating
-    plans with each record's predicted holder, ``remote`` the host's
-    :class:`~repro.prefetch.distributed.RemoteTier` serving routed
-    misses peer-to-peer before any storage read.  Most callers should
-    build the whole data plane with
-    :func:`repro.prefetch.distributed.make_cluster` instead.
-
-    Pair with ``InputPipeline(recycle_fn=ring.recycle)`` for the
-    allocation-free steady state; both ring classes ignore foreign arrays,
-    so the blanket recycle is safe even for miss-allocated batches.
+        from repro.core import ReadPathConfig, build_data_plane
+        plane = build_data_plane(store, ReadPathConfig(mode=..., ...))
     """
-    if cache_budget_bytes:
-        if shuffler is None:
-            raise ValueError("the tiered read path needs shuffler=")
-        from repro.prefetch.fetcher import PrefetchingFetcher
+    from repro.core.readpath import ReadPathConfig, build_data_plane
 
-        return PrefetchingFetcher(
-            store,
-            shuffler,
-            budget_bytes=cache_budget_bytes,
-            lookahead=lookahead,
-            mode=mode,
-            ring=ring,
-            gap_bytes=gap_bytes,
-            workers=workers,
-            background=prefetch_background,
-            max_epochs=max_epochs,
-            policy=eviction_policy,
-            planner=prefetch_planner,
-            remote=remote,
-            placement=placement,
-        )
-    if mode == "auto":
-        mode = "ragged" if store.variable else "dense"
-    if mode == "dense":
-        if store.variable:
-            raise ValueError("dense mode needs a fixed-size store")
-        if ring is not None and not isinstance(ring, BatchBufferRing):
-            raise TypeError("dense mode takes a BatchBufferRing")
-
-        def fetch_dense(idx: np.ndarray):
-            out = ring.acquire(len(idx)) if ring is not None else None
-            try:
-                return store.read_batch_into(
-                    idx, out=out, gap_bytes=gap_bytes, workers=workers
-                )
-            except BaseException:
-                if out is not None:
-                    ring.recycle(out)  # failed fetch must not drain the ring
-                raise
-
-        return fetch_dense
-    if mode != "ragged":
-        raise ValueError(f"mode must be auto|dense|ragged, got {mode!r}")
-    if ring is not None and not isinstance(ring, RaggedBufferRing):
-        raise TypeError("ragged mode takes a RaggedBufferRing")
-
-    def fetch_ragged(idx: np.ndarray):
-        return store.read_batch_ragged(
-            idx, gap_bytes=gap_bytes, workers=workers, ring=ring
-        )
-
-    return fetch_ragged
+    config = ReadPathConfig(
+        mode=mode,
+        ring=ring,
+        gap_bytes=gap_bytes,
+        workers=workers,
+        shuffler=shuffler,
+        cache_budget_bytes=cache_budget_bytes,
+        lookahead=lookahead,
+        prefetch_background=prefetch_background,
+        max_epochs=max_epochs,
+        eviction_policy=eviction_policy,
+        prefetch_planner=prefetch_planner,
+        remote=remote,
+        placement=placement,
+    )
+    warnings.warn(
+        "store_fetch_fn(**kwargs) is deprecated; use "
+        "repro.core.build_data_plane(store, repro.core.ReadPathConfig(...)) "
+        "instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return build_data_plane(store, config)
 
 
 def _put_until(q: "queue.Queue", item: Any, stop: threading.Event) -> bool:

@@ -16,17 +16,25 @@ import json
 import tempfile
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core.readpath import build_data_plane
 from repro.data.synthetic import decode_token_batch, make_token_dataset
+from repro.launch.args import (
+    add_read_path_args,
+    config_from_args,
+    make_shuffler_from_args,
+    planner_from_args,
+)
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.storage.faults import FaultInjector, FaultSpec
 from repro.storage.record_store import IOStats, RecordStore
-from repro.train.loop import Trainer, TrainLoopConfig, make_shuffler
+from repro.train.loop import Trainer, TrainLoopConfig
 from repro.train.optimizer import AdamWConfig
 
 
 def build_argparser():
     ap = argparse.ArgumentParser()
+    add_read_path_args(ap)
     ap.add_argument("--arch", default="minitron-8b", choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
     ap.add_argument("--num-records", type=int, default=512)
@@ -34,29 +42,14 @@ def build_argparser():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--steps", type=int, default=0, help="cap total steps")
-    ap.add_argument("--shuffler", default="lirs",
-                    choices=["lirs", "lirs_page", "bmf", "tfip",
-                             "corgipile", "corgi2"])
-    ap.add_argument("--shuffle-block-records", type=int, default=0,
-                    help="block size (records) for corgipile/corgi2; "
-                         "0 = batch//2")
-    ap.add_argument("--shuffle-buffer-blocks", type=int, default=2,
-                    help="shuffle-buffer span in blocks for "
-                         "corgipile/corgi2")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--data", default="", help="existing RecordStore path")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fail-at-step", type=int, default=-1)
-    ap.add_argument("--io-workers", type=int, default=4,
-                    help="reader threads for coalesced batch reads (queue depth)")
     ap.add_argument("--io-producers", type=int, default=1,
                     help="pipeline producer threads (ordered reassembly)")
-    ap.add_argument("--cache-mb", type=float, default=0.0,
-                    help="DRAM tier budget in MiB (0 = no tiered read path); "
-                         "with --hosts > 1 this is the FLEET budget, split "
-                         "evenly across hosts")
     ap.add_argument("--hosts", type=int, default=1,
                     help="run the data plane as an N-host clairvoyant "
                          "cluster (repro.prefetch.distributed): each host "
@@ -64,21 +57,8 @@ def build_argparser():
                          "it consumes, and serves peers host-to-host "
                          "before storage.  Batches stay byte-identical to "
                          "--hosts 1; compute is unchanged (single device). "
-                         "Needs --cache-mb > 0")
-    ap.add_argument("--prefetch-lookahead", type=int, default=8,
-                    help="batches the clairvoyant prefetcher plans ahead")
-    ap.add_argument("--eviction-policy", default="belady",
-                    choices=["lru", "belady"],
-                    help="DRAM tier eviction: lru (recency) or belady "
-                         "(farthest next use — exact under the known "
-                         "LIRS permutation, the default)")
-    ap.add_argument("--prefetch-planner", default="auto",
-                    choices=["auto", "on", "off"],
-                    help="policy-aware prefetch planner: simulate the "
-                         "cache admission decision along the known index "
-                         "stream and drop doomed records from prefetch "
-                         "plans instead of reading them twice (auto = on "
-                         "for belady, off for lru)")
+                         "Needs --cache-mb > 0 (with --hosts > 1 the "
+                         "budget is the FLEET budget, split evenly)")
     ap.add_argument("--chaos", default="",
                     help="fault-injection spec for the read path, e.g. "
                          "'seed=1,transient=0.05,stall=0.01,stall_s=0.2' "
@@ -132,17 +112,7 @@ def main(argv=None):
     )
     seq = args.seq_len
 
-    shuffle_kw = {}
-    if args.shuffler == "lirs_page":
-        shuffle_kw["page_groups"] = store.page_groups()
-    elif args.shuffler in ("corgipile", "corgi2"):
-        if args.shuffle_block_records > 0:
-            shuffle_kw["block_records"] = args.shuffle_block_records
-        shuffle_kw["buffer_blocks"] = args.shuffle_buffer_blocks
-    shuffler = make_shuffler(
-        args.shuffler, store.num_records, args.batch, seed=args.seed,
-        **shuffle_kw,
-    )
+    shuffler = make_shuffler_from_args(args, store, args.batch, args.seed)
 
     fetcher = None
     cluster = None
@@ -166,11 +136,7 @@ def main(argv=None):
             background=True,
             max_epochs=args.epochs,
             policy=args.eviction_policy,
-            planner=(
-                None
-                if args.prefetch_planner == "auto"
-                else args.prefetch_planner == "on"
-            ),
+            planner=planner_from_args(args),
         )
         fetcher = ClusterFetcher(cluster)
         batch_iter_fn = fetcher.batch_iter
@@ -186,21 +152,9 @@ def main(argv=None):
         # shuffler's known index stream (batch bytes unchanged).
         # max_epochs stops the lookahead from prefetching past the last
         # epoch (reads nobody would consume, stalling shutdown)
-        from repro.core.pipeline import store_fetch_fn
-
-        fetcher = store_fetch_fn(
+        fetcher = build_data_plane(
             store,
-            shuffler=shuffler,
-            cache_budget_bytes=int(args.cache_mb * 2**20),
-            lookahead=args.prefetch_lookahead,
-            workers=args.io_workers,
-            max_epochs=args.epochs,
-            eviction_policy=args.eviction_policy,
-            prefetch_planner=(
-                None
-                if args.prefetch_planner == "auto"
-                else args.prefetch_planner == "on"
-            ),
+            config_from_args(args, shuffler=shuffler, max_epochs=args.epochs),
         )
         batch_iter_fn = fetcher.batch_iter
 

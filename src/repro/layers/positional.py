@@ -50,4 +50,7 @@ def sinusoidal(length: int, dim: int, dtype=jnp.float32):
 
 
 def default_positions(batch: int, seq: int, offset=0):
+    offset = jnp.asarray(offset, jnp.int32)
+    if offset.ndim:  # per-row offsets (continuous-batching decode)
+        offset = offset[:, None]
     return offset + jnp.arange(seq, dtype=jnp.int32)[None, :].repeat(batch, 0)

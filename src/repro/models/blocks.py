@@ -173,6 +173,16 @@ def _self_attention(p, x, cfg: ModelConfig, kind: str, mode: str, cache, pos, au
         cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
         cur = jnp.full((x.shape[0],), pos, jnp.int32)
         o = attn.decode_local_attention(q, ck, cv, cur, cfg.local_window)
+    elif jnp.ndim(pos) == 1:
+        # per-slot decode (continuous batching): each row appends at its
+        # own position — vmapped single-row writes, per-row causal mask
+        write = jax.vmap(
+            lambda c, new, p: jax.lax.dynamic_update_slice(c, new, (p, 0, 0))
+        )
+        ck = write(cache["k"], k, pos)
+        cv = write(cache["v"], v, pos)
+        cur = pos.astype(jnp.int32)
+        o = attn.decode_attention(q, ck, cv, cur)
     else:
         ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
         cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))

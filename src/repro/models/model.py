@@ -340,6 +340,67 @@ def extend_cache(cfg: ModelConfig, cache, extra: int):
     return {"pos": cache["pos"], "stages": new_stages}
 
 
+def prefill_at(cfg: ModelConfig, params, tokens, lengths, extras=None, ctx=None):
+    """Right-padded prefill: logits at each row's *last real* token.
+
+    ``tokens`` is (B, T) with row ``i`` real through ``lengths[i]`` and
+    pad junk after; causal attention means positions ``< lengths[i]``
+    never attend the junk, and the returned per-row KV past ``lengths``
+    is overwritten by decode writes before it is ever attended (the
+    decode step at position ``p`` writes ``p`` *then* masks ``<= p``).
+    """
+    hidden, caches, _ = forward_hidden(cfg, params, tokens, "prefill", extras, ctx)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    last = hidden[jnp.arange(tokens.shape[0]), lengths - 1]
+    logits = _logits(cfg, params, last)
+    return {"pos": lengths, "stages": caches}, logits
+
+
+def decode_step_slots(cfg: ModelConfig, params, cache, tokens, extras=None, ctx=None):
+    """Per-slot decode: ``cache['pos']`` is (B,), one position per row.
+
+    Row ``i`` appends at ``pos[i]`` and attends ``<= pos[i]`` — the
+    continuous-batching primitive.  All ops downstream of the KV write
+    are row-independent, so each row's output is bitwise identical to a
+    run where it is the only live slot in the same-shape arena.
+    """
+    pos = cache["pos"]
+    hidden, new_caches, _ = forward_hidden(
+        cfg, params, tokens, "decode", extras, ctx, caches=cache, pos=pos
+    )
+    logits = _logits(cfg, params, hidden[:, -1])
+    return {"pos": pos + 1, "stages": new_caches}, logits
+
+
+def write_prefill_slot(cfg: ModelConfig, arena, slot, pre):
+    """Copy a one-row prefill cache into row ``slot`` of a decode arena.
+
+    ``arena`` self-attention leaves are (L, B, C, K, D); ``pre`` comes
+    from a batch-1 :func:`prefill` / :func:`prefill_at` with T <= C.
+    Only self-attention KV is written — the serving engine is restricted
+    to attention-kind blocks, whose state lives entirely in the KV
+    arena.  Returns the arena with ``pos[slot]`` set to the prefill's.
+    """
+    new_stages = []
+    for si, (pattern, repeats) in enumerate(cfg.stages):
+        per_pos = []
+        for pi, kind in enumerate(pattern):
+            a = arena["stages"][si][pi]
+            if kind in ("attn", "moe"):
+                p = pre["stages"][si][pi]
+                a = dict(a)
+                for key in ("k", "v"):
+                    a[key] = jax.lax.dynamic_update_slice(
+                        a[key],
+                        p[key].astype(a[key].dtype),
+                        (0, slot, 0, 0, 0),
+                    )
+            per_pos.append(a)
+        new_stages.append(tuple(per_pos))
+    pos = arena["pos"].at[slot].set(jnp.asarray(pre["pos"], jnp.int32).reshape(()))
+    return {"pos": pos, "stages": new_stages}
+
+
 def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int, pos: int = 0):
     """Build a zeroed decode cache (concrete); mirrors prefill's structure."""
     from repro.models.blocks import init_cache

@@ -1,0 +1,19 @@
+"""Serving: continuous batching over the tiered store.
+
+- request:  Request/Completion, StepClock, synthetic offered-load workloads
+- engine:   slot-based continuous/static batching prefill+decode engine
+- reuse:    estimated-reuse admission for the request-stream feature cache
+"""
+from repro.serve.engine import SERVE_MODES, ServeEngine  # noqa: F401
+from repro.serve.request import (  # noqa: F401
+    Completion,
+    Request,
+    StepClock,
+    percentile,
+    synthetic_workload,
+    zipf_probabilities,
+)
+from repro.serve.reuse import (  # noqa: F401
+    EstimatedReusePolicy,
+    RequestStreamCache,
+)

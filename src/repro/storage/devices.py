@@ -288,6 +288,83 @@ def distributed_hit_model(
     }
 
 
+def zipf_popularity(n: int, alpha: float = 1.0):
+    """IRM popularity law for a served request stream: ``p_i ∝ 1/i^alpha``
+    over ``n`` items (1-indexed ranks), normalized.  Returns a list of
+    floats, most popular first."""
+    if n < 1:
+        raise ValueError("n must be >= 1")
+    w = [1.0 / (i ** alpha) for i in range(1, n + 1)]
+    s = sum(w)
+    return [x / s for x in w]
+
+
+def che_characteristic_time(popularity, capacity: int) -> float:
+    """Che's characteristic time ``T`` for an LRU cache of ``capacity``
+    slots under IRM popularity: the root of
+    ``sum_i (1 - exp(-p_i T)) = capacity`` (each item occupies the cache
+    iff re-requested within ``T``; the expected occupancy must equal the
+    capacity).  Solved by bisection — the left side is monotone in ``T``."""
+    n = len(popularity)
+    if capacity <= 0:
+        return 0.0
+    if capacity >= n:
+        return math.inf
+    lo, hi = 0.0, 1.0
+
+    def occupancy(t: float) -> float:
+        return sum(1.0 - math.exp(-p * t) for p in popularity)
+
+    while occupancy(hi) < capacity:
+        hi *= 2.0
+    for _ in range(100):
+        mid = 0.5 * (lo + hi)
+        if occupancy(mid) < capacity:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def served_hit_model(
+    popularity, capacity: int, policy: str = "lru"
+) -> float:
+    """Closed-form hit rate of the *served* (request-stream) feature
+    cache — the IRM sibling of :func:`cache_hit_model`, which prices the
+    tier under a training permutation.
+
+    A request stream has no clairvoyant schedule: items recur under a
+    popularity law (IRM — :func:`zipf_popularity` for the synthetic
+    workloads) instead of exactly once per epoch, so the permutation
+    closed forms do not apply.  Two anchors bracket any reasonable
+    policy:
+
+    * ``lru`` — Che's approximation: ``hit = sum_i p_i (1 − exp(−p_i T))``
+      with ``T`` from :func:`che_characteristic_time`.
+    * ``belady`` (= clairvoyant / perfect-LFU) — the cache holds exactly
+      the ``capacity`` most popular items: ``hit = sum of the top-C
+      popularity mass``.  This is the ceiling the estimated-reuse
+      admission (``repro.serve.reuse``) approaches as its interarrival
+      estimates converge on true popularity.
+
+    ``benchmarks/serve_latency.py`` and ``tests/test_serve.py`` hold the
+    measured estimated-reuse hit rate to the [LRU, clairvoyant] band.
+    """
+    n = len(popularity)
+    if capacity >= n:
+        return 1.0
+    if capacity <= 0:
+        return 0.0
+    if policy == "lru":
+        t = che_characteristic_time(popularity, capacity)
+        return sum(p * (1.0 - math.exp(-p * t)) for p in popularity)
+    if policy == "belady":
+        return sum(sorted(popularity, reverse=True)[:capacity])
+    raise ValueError(
+        f"eviction policy must be one of {EVICTION_POLICIES}, got {policy!r}"
+    )
+
+
 @dataclass(frozen=True)
 class NetworkModel:
     """Host-to-host link pricing for the cross-host tier.
